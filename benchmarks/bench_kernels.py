@@ -1,0 +1,31 @@
+"""Pallas kernel timings (interpret mode — correctness-path cost only; real
+TPU timings come from the roofline analysis, not this container)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit
+from repro.core import ternary
+from repro.kernels import ops
+
+
+def run(quick: bool = False):
+    rows = []
+    shapes = [(8, 512, 512)] if quick else [(8, 512, 512), (1, 1024, 1024)]
+    for (n, k, m) in shapes:
+        key = jax.random.PRNGKey(n + k)
+        t = ternary.random_ternary(key, (k, m))
+        scale = jnp.ones((m,))
+        tw = ternary.pack(t.astype(jnp.float32), scale)
+        x = jax.random.normal(key, (n, k))
+        for df in ("AP", "OP"):
+            tt = timeit(lambda x: ops.tsar_matmul(x, tw, dataflow=df, interpret=True),
+                        x, reps=2, warmup=1)
+            csv_row(f"pallas_mxu_{df}_{n}x{k}x{m}", tt * 1e6, "interpret_mode=1")
+        ip, iz = ternary.pack_indices(t, 4)
+        tt = timeit(lambda x: ops.tsar_lut_gemv(x, ip, iz, scale, c=4, interpret=True),
+                    x, reps=2, warmup=1)
+        csv_row(f"pallas_lut_{n}x{k}x{m}", tt * 1e6, "interpret_mode=1")
+        rows.append((n, k, m))
+    return rows

@@ -1,0 +1,36 @@
+"""Shared benchmark utilities + the BitNet model-size ladder from the paper
+(Fig. 1(c)/Fig. 8 evaluate 125M -> 100B)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+# (name, d_model, d_ff, n_layers) — BitNet-b1.58 family dims (public configs;
+# 100B extrapolated with the same aspect ratio the paper uses).
+BITNET_LADDER = [
+    ("125M", 768, 2048, 12),
+    ("350M", 1024, 2728, 24),   # d_ff rounded to a block-size multiple
+    ("1.5B", 1536, 4096, 24),
+    ("2B-4T", 2560, 6912, 30),
+    ("7B", 4096, 11008, 32),
+    ("13B", 5120, 13824, 40),
+    ("70B", 8192, 22016, 80),
+    ("100B", 9216, 24576, 96),
+]
+
+
+def timeit(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds per call (jitted fns; blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

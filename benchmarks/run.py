@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_e2e      — Fig. 8  end-to-end prefill/decode, T-SAR vs baselines
+  bench_memory   — Fig. 9  memory-request volume model (validated vs dry-run)
+  bench_scaling  — Fig. 10 kernel microbench (paper shapes) + chip scaling
+  bench_energy   — Table III decode throughput + energy/token
+  bench_kernels  — Pallas kernel interpret-mode timings (small shapes)
+
+``python -m benchmarks.run [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer reps/sizes")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "e2e", "memory", "scaling", "energy", "kernels"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    from benchmarks import bench_e2e, bench_energy, bench_kernels, bench_memory, bench_scaling
+
+    suites = {
+        "memory": lambda: bench_memory.run(quick=args.quick),
+        # 7B+ excluded by default: the memory-LUT *baseline* needs ~6 GB/gather
+        # buffer at N=128 on this 35 GB container (T-SAR itself is fine).
+        "e2e": lambda: bench_e2e.run(
+            sizes=("125M", "2B-4T") if args.quick else ("125M", "350M", "1.5B", "2B-4T"),
+            quick=args.quick),
+        "scaling": lambda: bench_scaling.run(quick=args.quick),
+        "energy": lambda: bench_energy.run(quick=args.quick),
+        "kernels": lambda: bench_kernels.run(quick=args.quick),
+    }
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointing import (  # noqa: F401
+    all_steps, latest_step, restore, save,
+)

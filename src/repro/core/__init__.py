@@ -1,0 +1,3 @@
+"""Core T-SAR algorithmic layer: ternary quantization, LUT algorithms,
+BitLinear, and the adaptive AP/OP dataflow selector."""
+from repro.core import bitlinear, dataflow, lut, ternary  # noqa: F401

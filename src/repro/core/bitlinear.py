@@ -1,0 +1,162 @@
+"""BitLinear: the ternary linear layer (paper Fig. 2(a,b)).
+
+Two operating modes:
+
+* **Training (QAT)** — latent fp32 master weights; forward ternarizes with the
+  absmean recipe and fake-quantizes activations to int8 levels, with
+  straight-through-estimator gradients to the latent weights.  This is the
+  BitNet-b1.58 training recipe; the paper consumes such checkpoints.
+* **Inference (frozen)** — weights ternarized once, packed to 2-bit bitplanes
+  + LUT index encodings; forward dispatches to one of the T-SAR kernels
+  (in-VMEM LUT, decode-to-MXU Pallas, or pure-jnp fallbacks) chosen by the
+  AP/OP dataflow selector (paper Sec. III-D).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut, ternary
+from repro.core.dataflow import select_kernel
+
+# Default LUT block size: c=4 -> 16-entry shared binary LUT, the sweet spot
+# for the TGEMV_16x16 configuration in the paper's Fig. 6 examples.
+DEFAULT_C = 4
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_ternarize(w: jax.Array) -> jax.Array:
+    """Absmean-ternarize + rescale, identity gradient (STE)."""
+    t, scale = ternary.absmean_ternarize(w)
+    return t * scale[..., None, :]
+
+
+def _ste_t_fwd(w):
+    return ste_ternarize(w), None
+
+
+def _ste_t_bwd(_, g):
+    return (g,)
+
+
+ste_ternarize.defvjp(_ste_t_fwd, _ste_t_bwd)
+
+
+@jax.custom_vjp
+def ste_act_quant(x: jax.Array) -> jax.Array:
+    """Fake int8 absmax quantization of activations, identity gradient."""
+    q, scale = ternary.quantize_activations(x)
+    return q.astype(x.dtype) * scale.astype(x.dtype)
+
+
+def _ste_a_fwd(x):
+    return ste_act_quant(x), None
+
+
+def _ste_a_bwd(_, g):
+    return (g,)
+
+
+ste_act_quant.defvjp(_ste_a_fwd, _ste_a_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Layer init / apply
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, k: int, m: int, dtype=jnp.float32) -> dict:
+    """Latent master weights, fan-in scaled init."""
+    w = jax.random.normal(key, (k, m), dtype) * (1.0 / jnp.sqrt(k))
+    return {"w": w}
+
+
+class FrozenBitLinear(NamedTuple):
+    """Packed inference-time parameters for one BitLinear layer."""
+
+    packed: ternary.TernaryWeights   # 2-bit bitplanes + per-channel scale
+    idx_pos: jax.Array               # (K//c, M) uint8 LUT encodings
+    idx_zero: jax.Array
+    c: int
+
+    @property
+    def shape(self):
+        return self.packed.shape
+
+
+def freeze(params: dict, c: int = DEFAULT_C) -> FrozenBitLinear:
+    """Compile-time weight encoding (paper Fig. 5 'offline' phase)."""
+    t, scale = ternary.absmean_ternarize(params["w"])
+    t8 = t.astype(jnp.int8)
+    idx_pos, idx_zero = ternary.pack_indices(t8, c)
+    return FrozenBitLinear(
+        packed=ternary.pack(t, scale), idx_pos=idx_pos, idx_zero=idx_zero, c=c
+    )
+
+
+def apply_train(params: dict, x: jax.Array) -> jax.Array:
+    """QAT forward: fake-quant activations x ternarized weights."""
+    w_t = ste_ternarize(params["w"])
+    x_q = ste_act_quant(x)
+    return x_q @ w_t.astype(x_q.dtype)
+
+
+def apply_eval(params: dict, x: jax.Array) -> jax.Array:
+    """Eval-mode forward from latent weights (exact int8 pipeline)."""
+    t, scale = ternary.absmean_ternarize(params["w"])
+    return lut.bitlinear_matmul_exact_int(x, t, scale).astype(x.dtype)
+
+
+def apply_frozen(
+    frozen: FrozenBitLinear,
+    x: jax.Array,
+    kernel: str = "auto",
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Inference forward with kernel dispatch.
+
+    kernel: 'auto' | 'tsar_lut' | 'tsar_mxu' | 'memory_lut' | 'dense'
+    """
+    k, m = frozen.shape
+    n = int(jnp.prod(jnp.asarray(x.shape[:-1]))) if x.ndim > 1 else 1
+    if kernel == "auto":
+        kernel = select_kernel(n=n, k=k, m=m, c=frozen.c).kernel
+
+    x32 = x.astype(jnp.float32)
+    w_scale = frozen.packed.scale
+
+    if kernel == "tsar_lut":
+        y = lut.tsar_lut_matmul(x32, frozen.idx_pos, frozen.idx_zero, frozen.c, w_scale)
+    elif kernel == "tsar_mxu":
+        if use_pallas:
+            from repro.kernels import ops
+
+            y = ops.tsar_matmul(x32, frozen.packed)
+        else:
+            a_q, a_scale = ternary.quantize_activations(x32)
+            t = ternary.unpack(frozen.packed)
+            y = lut.dense_int8_matmul(a_q, a_scale, t, w_scale)
+    elif kernel == "memory_lut":
+        t = ternary.unpack(frozen.packed)
+        li = lut.ternary_lut_indices(t, frozen.c)
+        y = lut.memory_lut_matmul(x32, li, frozen.c, w_scale)
+    elif kernel == "dense":
+        w = ternary.unpack_dequant(frozen.packed)
+        y = lut.dense_matmul(x32, w)
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    return y.astype(x.dtype)
+
+
+def apply(params: Any, x: jax.Array, *, train: bool = True, **kw) -> jax.Array:
+    """Unified entry point used by the model zoo."""
+    if isinstance(params, FrozenBitLinear):
+        return apply_frozen(params, x, **kw)
+    if train:
+        return apply_train(params, x)
+    return apply_eval(params, x)

@@ -1,0 +1,252 @@
+"""LUT-based ternary GEMM/GEMV algorithms (paper Sec. II + III-A/B).
+
+Three algorithm families, all pure JAX:
+
+1. ``tsar_*`` — the paper's method, with our single-shared-LUT compression:
+   binary LUTs are built **on the fly** from the activation tile and consumed
+   immediately (in registers/VMEM when lowered; nothing LUT-shaped is ever a
+   kernel *input*).  The identity used (see DESIGN.md Sec. 2.1)::
+
+       S[p]   = sum_i bit_i(p) * a_i                (2^c entries per block)
+       <w,a>  = 2*S[idx_pos] + S[idx_zero] - sum(a)
+
+   where ``idx_pos``/``idx_zero`` are the compile-time weight encodings from
+   :func:`repro.core.ternary.pack_indices`.
+
+2. ``memory_lut_*`` — the SOTA baseline the paper compares against (T-MAC /
+   BitNet.cpp TL-2): the full ternary LUT (3^c entries/block) is materialized
+   as an array in memory and the GEMV becomes pure gathers against it.  This
+   reproduces the memory-bound dataflow of the paper's Fig. 3(a).
+
+3. ``dense_*`` — reference dense paths: fp32/bf16 MAC (the FP16-kernel
+   baseline of the paper's Sec. I) and the decode-to-int8 MXU path that our
+   Pallas production kernel implements.
+
+Shapes follow the paper's convention: GEMV is ``(1,K) x (K,M)``, GEMM is
+``(N,K) x (K,M)``.  All functions accept activations ``a`` with arbitrary
+leading batch dims ``(..., K)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+
+# ---------------------------------------------------------------------------
+# Shared binary LUT construction ("TLUT" in the paper)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _bit_matrix(c: int):
+    """(2^c, c) float32 matrix with B[p, i] = bit_i(p)."""
+    import numpy as np
+
+    p = np.arange(1 << c, dtype=np.int32)
+    bits = ((p[:, None] >> np.arange(c)) & 1).astype(np.float32)
+    return bits
+
+
+def build_lut(a: jax.Array, c: int) -> jax.Array:
+    """Build the shared binary LUT S for every activation block.
+
+    ``a`` (..., K) -> S (..., K//c, 2^c) with
+    ``S[..., b, p] = sum_i bit_i(p) * a[..., b*c + i]``.
+
+    The per-block construction is a (c -> 2^c) expansion, i.e. exactly what the
+    paper's TLUT_cxs instruction computes inside SIMD registers.  Expressed as
+    a tiny matmul so XLA maps it onto the MXU / vector unit.
+    """
+    k = a.shape[-1]
+    if k % c != 0:
+        raise ValueError(f"K={k} not a multiple of block size c={c}")
+    blocks = a.reshape(a.shape[:-1] + (k // c, c))
+    bm = jnp.asarray(_bit_matrix(c), dtype=a.dtype)  # (2^c, c)
+    return blocks @ bm.T  # (..., B, 2^c)
+
+
+def block_sums(a: jax.Array, c: int) -> jax.Array:
+    """Per-block activation sums ``sum(a_block)`` -> (..., K//c)."""
+    k = a.shape[-1]
+    return a.reshape(a.shape[:-1] + (k // c, c)).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# T-SAR on-the-fly LUT GEMV / GEMM
+# ---------------------------------------------------------------------------
+
+def tsar_lut_matmul(
+    a: jax.Array,
+    idx_pos: jax.Array,
+    idx_zero: jax.Array,
+    c: int,
+    w_scale: jax.Array | None = None,
+) -> jax.Array:
+    """T-SAR LUT mat(vec)mul: ``a`` (..., K) x encoded weights (K//c, M) -> (..., M).
+
+    LUTs are built on the fly from ``a`` and consumed immediately — they never
+    appear as function inputs, mirroring the register-resident dataflow.
+    """
+    s = build_lut(a, c)                          # (..., B, 2^c)
+    tot = block_sums(a, c)                       # (..., B)
+    # Gather per output channel: S[..., b, idx[b, m]].
+    # take_along_axis over the last axis with idx broadcast to (..., B, M).
+    bdims = s.shape[:-2]
+    bcount = s.shape[-2]
+    m = idx_pos.shape[-1]
+    ip = jnp.broadcast_to(idx_pos.astype(jnp.int32), bdims + (bcount, m))
+    iz = jnp.broadcast_to(idx_zero.astype(jnp.int32), bdims + (bcount, m))
+    g_pos = jnp.take_along_axis(s, ip, axis=-1)  # (..., B, M)
+    g_zero = jnp.take_along_axis(s, iz, axis=-1)
+    y = (2.0 * g_pos + g_zero).sum(axis=-2) - tot.sum(axis=-1, keepdims=True)
+    if w_scale is not None:
+        y = y * w_scale
+    return y
+
+
+def tsar_lut_matmul_twolut(
+    a: jax.Array,
+    idx_pos: jax.Array,
+    idx_zero: jax.Array,
+    c: int,
+    w_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Paper-literal two-LUT form: ``<w,a> = <w_D,a> - <w_S,a>``.
+
+    Builds *both* binary LUTs (dense in {-1,+1}, sparse in {0,1}) per block as
+    the paper's TLUT instruction does, then subtracts the two gathers.  Kept
+    for faithfulness + as the oracle for the compressed single-LUT form.
+
+    The dense plane ``w_D`` is +1 wherever ``w in {0,+1}``, so its LUT index
+    is the bitwise OR of the (disjoint) positive and zero encodings.
+    """
+    s = build_lut(a, c)                       # sparse-style LUT: sum of selected
+    tot = block_sums(a, c)[..., None]         # (..., B, 1)
+    dense_lut = 2.0 * s - tot                 # entries of the {-1,+1} LUT
+    sparse_lut = s
+    idx_dense = jnp.bitwise_or(idx_pos, idx_zero)
+    bdims = s.shape[:-2]
+    bcount = s.shape[-2]
+    m = idx_dense.shape[-1]
+    idn = jnp.broadcast_to(idx_dense.astype(jnp.int32), bdims + (bcount, m))
+    izr = jnp.broadcast_to(idx_zero.astype(jnp.int32), bdims + (bcount, m))
+    y = (jnp.take_along_axis(dense_lut, idn, axis=-1)
+         - jnp.take_along_axis(sparse_lut, izr, axis=-1)).sum(axis=-2)
+    if w_scale is not None:
+        y = y * w_scale
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Memory-LUT baseline (T-MAC / BitNet.cpp TL-2 dataflow, paper Fig. 3(a))
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _ternary_patterns(c: int):
+    """(3^c, c) int8 matrix enumerating every ternary block pattern."""
+    import numpy as np
+
+    n = 3 ** c
+    digits = np.zeros((n, c), dtype=np.int8)
+    idx = np.arange(n)
+    for i in range(c):
+        digits[:, i] = (idx % 3) - 1  # {-1, 0, +1}
+        idx = idx // 3
+    return digits
+
+
+def ternary_lut_indices(t: jax.Array, c: int) -> jax.Array:
+    """Base-3 encode ternary weights (K, M) -> (K//c, M) int32 LUT indices."""
+    k, m = t.shape
+    blocks = (t.reshape(k // c, c, m).astype(jnp.int32) + 1)  # {0,1,2}
+    pows = (3 ** jnp.arange(c, dtype=jnp.int32)).reshape(1, c, 1)
+    return jnp.sum(blocks * pows, axis=1)
+
+
+def memory_lut_precompute(a: jax.Array, c: int) -> jax.Array:
+    """Materialize the full ternary LUT in memory: (..., K//c, 3^c).
+
+    This is the baseline's *stored* TLUT — 3^c fp entries per block, the
+    object whose fetches dominate memory traffic in the paper's Fig. 2(c).
+    """
+    k = a.shape[-1]
+    blocks = a.reshape(a.shape[:-1] + (k // c, c))
+    pat = jnp.asarray(_ternary_patterns(c), dtype=a.dtype)  # (3^c, c)
+    return blocks @ pat.T
+
+
+def memory_lut_matmul(
+    a: jax.Array,
+    lut_idx: jax.Array,
+    c: int,
+    w_scale: jax.Array | None = None,
+    precomputed_lut: jax.Array | None = None,
+) -> jax.Array:
+    """Baseline LUT mat(vec)mul: gathers against a memory-resident ternary LUT.
+
+    If ``precomputed_lut`` is given it is used directly (steady-state decode,
+    where the baseline reuses stored TLUTs and pays the fetch traffic).
+    """
+    lut = precomputed_lut if precomputed_lut is not None else memory_lut_precompute(a, c)
+    bdims = lut.shape[:-2]
+    bcount = lut.shape[-2]
+    m = lut_idx.shape[-1]
+    ix = jnp.broadcast_to(lut_idx.astype(jnp.int32), bdims + (bcount, m))
+    y = jnp.take_along_axis(lut, ix, axis=-1).sum(axis=-2)
+    if w_scale is not None:
+        y = y * w_scale
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Dense reference paths
+# ---------------------------------------------------------------------------
+
+def dense_matmul(a: jax.Array, w: jax.Array, w_scale: jax.Array | None = None) -> jax.Array:
+    """Dense fp MAC baseline: (..., K) x (K, M)."""
+    y = a @ w.astype(a.dtype)
+    if w_scale is not None:
+        y = y * w_scale
+    return y
+
+
+def dense_int8_matmul(
+    a_q: jax.Array, a_scale: jax.Array, t: jax.Array, w_scale: jax.Array
+) -> jax.Array:
+    """Decode-to-MXU path: int8 activations x int8 ternary weights, int32 acc.
+
+    This is the pure-jnp spelling of the production Pallas kernel's math:
+    ``y = (a_q @ t) * a_scale * w_scale`` with exact int32 accumulation.
+    """
+    acc = jax.lax.dot_general(
+        a_q, t,
+        dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * a_scale * w_scale
+
+
+def bitlinear_matmul_exact_int(
+    a: jax.Array, t: jax.Array, w_scale: jax.Array
+) -> jax.Array:
+    """Full quant->int matmul->dequant BitLinear pipeline (paper Fig. 2(b))."""
+    a_q, a_scale = ternary.quantize_activations(a)
+    return dense_int8_matmul(a_q, a_scale, t.astype(jnp.int8), w_scale)
+
+
+def bitlinear_matmul_fast(
+    a: jax.Array, t: jax.Array, w_scale: jax.Array
+) -> jax.Array:
+    """Same pipeline, integer math carried in f32 FMAs.
+
+    Numerically identical to the int path for K < 2^24/127 (~132k): the
+    operands are exact small integers, so f32 accumulation is exact.  Used
+    for wall-clock benchmarking on backends whose int8 dot lowering is slow
+    (XLA:CPU); real deployments use the Pallas int8 kernel.
+    """
+    a_q, a_scale = ternary.quantize_activations(a)
+    acc = a_q.astype(jnp.float32) @ t.astype(jnp.float32)
+    return acc * a_scale * w_scale

@@ -1,0 +1,217 @@
+"""Ternary quantization, bitplane packing, and the T-SAR ternary->binary decomposition.
+
+This module is the algorithmic layer of the paper (Sec. III-A):
+
+* ``absmean`` ternarization of latent fp weights (BitNet-b1.58 recipe).
+* Decomposition of a ternary tensor ``w in {-1,0,1}`` into two binary planes::
+
+      dense  w_D in {-1,+1}:  w_D = w  where w != 0, else +1
+      sparse w_S in {0, 1}:   w_S = 1  where w == 0, else 0
+
+  so that ``<w, a> = <w_D, a> - <w_S, a>`` for any activation vector ``a``.
+* Bitplane packing: the *sign* plane (bit of w_D) and the *zero* plane (bit of
+  w_S) are each packed 8 weights/byte -> 2 bits/weight total in HBM, the 8x
+  compression the paper's Fig. 1(a) shows.
+* Per-token int8 activation quantization (absmax), the input half of the
+  BitLinear pipeline in the paper's Fig. 2(b).
+
+Everything here is pure JAX and shape-polymorphic; the Pallas kernels in
+``repro.kernels`` consume the packed representation produced here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Number of weights packed per byte in a bitplane.
+PACK = 8
+
+
+class TernaryWeights(NamedTuple):
+    """Frozen, packed ternary weight tensor for inference.
+
+    Logical layout is ``(K, M)`` (in-features, out-features).  Both planes are
+    packed along K so a Pallas kernel tile of ``bk`` input channels reads
+    ``bk // 8`` bytes per output channel per plane.
+    """
+
+    sign_plane: jax.Array   # uint8 (K//8, M)  bit=1 where w == -1 (sign of dense plane)
+    zero_plane: jax.Array   # uint8 (K//8, M)  bit=1 where w == 0
+    scale: jax.Array        # f32   (M,) per-output-channel dequant scale
+    shape: tuple            # static logical (K, M)
+
+    @property
+    def k(self) -> int:
+        return self.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.shape[1]
+
+    def nbytes(self) -> int:
+        """HBM bytes for the packed planes (the paper's 2-bit/weight claim)."""
+        return int(self.sign_plane.size + self.zero_plane.size + self.scale.size * 4)
+
+
+def absmean_ternarize(w: jax.Array, eps: float = 1e-6) -> tuple[jax.Array, jax.Array]:
+    """BitNet-b1.58 absmean ternarization.
+
+    ``w`` fp latent weights; the last two dims are the (K, M) matrix, any
+    leading dims are batch (stacked layers, stacked experts).  Returns
+    ``(t, scale)`` with ``t in {-1,0,+1}`` (same dtype as w) and
+    per-(batch, output-channel) scale such that ``w ~= t * scale``.
+    """
+    # Per-matrix absmean threshold (the BitNet recipe uses per-tensor gamma).
+    gamma = jnp.mean(jnp.abs(w), axis=(-2, -1), keepdims=True) + eps
+    t = jnp.clip(jnp.round(w / gamma), -1, 1)
+    # Per-output-channel scale refits the dequant step: least-squares of w on t.
+    num = jnp.sum(w * t, axis=-2)
+    den = jnp.sum(t * t, axis=-2) + eps
+    scale = num / den
+    return t, scale
+
+
+def decompose(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Ternary -> (dense, sparse) binary decomposition (paper Sec. III-A).
+
+    Returns ``(w_d, w_s)`` with ``w_d in {-1,+1}`` and ``w_s in {0,1}`` so that
+    ``t == w_d - w_s`` elementwise.
+    """
+    w_s = (t == 0).astype(t.dtype)
+    w_d = jnp.where(t == 0, jnp.ones_like(t), t)
+    return w_d, w_s
+
+
+def recompose(w_d: jax.Array, w_s: jax.Array) -> jax.Array:
+    """Inverse of :func:`decompose`."""
+    return w_d - w_s
+
+
+def _pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a ``{0,1}`` array along axis 0: (K, ...) uint -> (K//8, ...) uint8.
+
+    Bit i of byte j holds element ``j*8 + i`` (LSB-first), matching the
+    unpacking order in the Pallas kernels.
+    """
+    k = bits.shape[0]
+    if k % PACK != 0:
+        raise ValueError(f"K={k} must be a multiple of {PACK} for packing")
+    b = bits.astype(jnp.uint8).reshape((k // PACK, PACK) + bits.shape[1:])
+    shifts = jnp.arange(PACK, dtype=jnp.uint8).reshape((1, PACK) + (1,) * (bits.ndim - 1))
+    return jnp.sum(b << shifts, axis=1).astype(jnp.uint8)
+
+
+def _unpack_bits(packed: jax.Array, k: int) -> jax.Array:
+    """Inverse of :func:`_pack_bits` -> int8 {0,1} of shape (k, ...)."""
+    shifts = jnp.arange(PACK, dtype=jnp.uint8).reshape((1, PACK) + (1,) * (packed.ndim - 1))
+    bits = (packed[:, None] >> shifts) & jnp.uint8(1)
+    return bits.reshape((k,) + packed.shape[1:]).astype(jnp.int8)
+
+
+def pack(t: jax.Array, scale: jax.Array | None = None) -> TernaryWeights:
+    """Pack a ternary (K, M) matrix into 2-bit bitplanes.
+
+    sign_plane bit = 1 where t == -1 (so dense value = 1 - 2*bit),
+    zero_plane bit = 1 where t == 0.
+    """
+    if t.ndim != 2:
+        raise ValueError(f"pack expects a 2-D (K, M) matrix, got {t.shape}")
+    k, m = t.shape
+    if scale is None:
+        scale = jnp.ones((m,), jnp.float32)
+    sign = (t < 0)
+    zero = (t == 0)
+    return TernaryWeights(
+        sign_plane=_pack_bits(sign),
+        zero_plane=_pack_bits(zero),
+        scale=scale.astype(jnp.float32),
+        shape=(k, m),
+    )
+
+
+def unpack(tw: TernaryWeights, dtype=jnp.int8) -> jax.Array:
+    """Unpack bitplanes back to a dense ternary (K, M) matrix (no scale)."""
+    k, _ = tw.shape
+    sign = _unpack_bits(tw.sign_plane, k)   # {0,1}, 1 => -1
+    zero = _unpack_bits(tw.zero_plane, k)   # {0,1}, 1 => 0
+    vals = (1 - 2 * sign.astype(jnp.int8)) * (1 - zero.astype(jnp.int8))
+    return vals.astype(dtype)
+
+
+def unpack_dequant(tw: TernaryWeights, dtype=jnp.float32) -> jax.Array:
+    """Unpack + apply per-channel scale -> approximate original fp weights."""
+    return unpack(tw, jnp.float32) * tw.scale[None, :].astype(jnp.float32)
+
+
+def pack_indices(t: jax.Array, c: int) -> tuple[jax.Array, jax.Array]:
+    """Encode ternary (K, M) weights as per-block LUT indices (compile-time
+    weight encoding in the paper's Fig. 5).
+
+    Splits K into blocks of ``c`` and returns ``(idx_d, idx_s)`` of shape
+    (K//c, M), uint8 (requires c <= 8), where bit i of ``idx_d`` is
+    ``1`` iff ``w[block*c+i] == +1`` (dense-plane positive bit) and bit i of
+    ``idx_s`` is ``1`` iff ``w[block*c+i] == 0``.
+
+    With the shared binary LUT ``S[p] = sum_i bit_i(p) * a_i`` these satisfy
+    ``<w, a>_block = 2*S[idx_d] + S[idx_s] - sum(a_block)``  ... see lut.py.
+    """
+    if c > 8:
+        raise ValueError("block size c must be <= 8 to fit uint8 indices")
+    k, m = t.shape
+    if k % c != 0:
+        raise ValueError(f"K={k} not a multiple of block size c={c}")
+    blocks = t.reshape(k // c, c, m)
+    shifts = (1 << jnp.arange(c, dtype=jnp.int32)).reshape(1, c, 1)
+    idx_d = jnp.sum(jnp.where(blocks > 0, shifts, 0), axis=1).astype(jnp.uint8)
+    idx_s = jnp.sum(jnp.where(blocks == 0, shifts, 0), axis=1).astype(jnp.uint8)
+    return idx_d, idx_s
+
+
+def quantize_activations(a: jax.Array, eps: float = 1e-6) -> tuple[jax.Array, jax.Array]:
+    """Per-token absmax int8 activation quantization (paper Fig. 2(b)).
+
+    ``a`` (..., K) float -> (q int8 (..., K), scale f32 (..., 1)) with
+    ``a ~= q * scale``.
+    """
+    absmax = jnp.max(jnp.abs(a), axis=-1, keepdims=True)
+    scale = (absmax / 127.0 + eps).astype(jnp.float32)
+    q = jnp.clip(jnp.round(a / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ternary_density(t: jax.Array) -> jax.Array:
+    """Fraction of non-zero weights — used by the AP/OP cost model."""
+    return jnp.mean((t != 0).astype(jnp.float32))
+
+
+def random_ternary(key: jax.Array, shape: tuple, p_zero: float = 1.0 / 3.0) -> jax.Array:
+    """Random ternary matrix for tests/benchmarks (int8)."""
+    kz, ks = jax.random.split(key)
+    zero = jax.random.bernoulli(kz, p_zero, shape)
+    sign = jax.random.bernoulli(ks, 0.5, shape)
+    return jnp.where(zero, 0, jnp.where(sign, 1, -1)).astype(jnp.int8)
+
+
+def packed_bytes_per_weight() -> float:
+    """Storage cost of the T-SAR packing: 2 bits/weight."""
+    return 2.0 / 8.0
+
+
+def tl2_bytes_per_weight() -> float:
+    """TL-2 baseline packing density from the paper footnote: 1.67 bits/weight."""
+    return 1.67 / 8.0
+
+
+def np_pack_reference(t: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """NumPy oracle for the bitplane packing (used by property tests)."""
+    k, m = t.shape
+    sign = (t < 0).astype(np.uint8)
+    zero = (t == 0).astype(np.uint8)
+
+    def p(bits):
+        return np.packbits(bits.reshape(k // PACK, PACK, m), axis=1, bitorder="little").reshape(k // PACK, m)
+
+    return p(sign), p(zero)

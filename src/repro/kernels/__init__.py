@@ -1,0 +1,8 @@
+"""T-SAR Pallas TPU kernels.
+
+* ``tsar_matmul`` — production packed-ternary matmul (decode-in-VMEM -> MXU).
+* ``tsar_lut`` — paper-faithful in-VMEM TLUT/TGEMV kernel.
+* ``ops`` — jitted public wrappers (padding, quant, interpret fallback).
+* ``ref`` — pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,122 @@
+"""Public jitted wrappers for the T-SAR Pallas kernels.
+
+Handles activation quantization, shape padding to tile multiples, leading-dim
+flattening, and interpret-mode fallback on non-TPU backends (this container is
+CPU-only; TPU is the compilation target, interpret mode the validation path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+from repro.kernels import tsar_lut as _lut_kernel
+from repro.kernels import tsar_matmul as _mxu_kernel
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _tile(n: int, pref: int, align: int) -> int:
+    """Pick a tile size <= pref that keeps the padded dim a tile multiple."""
+    if n >= pref:
+        return pref
+    return max(align, ((n + align - 1) // align) * align)
+
+
+def tsar_matmul(
+    x: jax.Array,
+    tw: ternary.TernaryWeights,
+    *,
+    dataflow: str = "AP",
+    bn: int = 128,
+    bk: int = 512,
+    bm: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """BitLinear matmul via the production packed-decode kernel.
+
+    ``x`` (..., K) float -> (..., M) float32.  Full pipeline: per-token int8
+    quant -> packed-ternary int8 matmul with VMEM decode -> fused dequant.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    k, m = tw.shape
+    lead = x.shape[:-1]
+    n = 1
+    for d in lead:
+        n *= d
+    x2 = x.reshape(n, k).astype(jnp.float32)
+
+    a_q, a_scale = ternary.quantize_activations(x2)
+
+    bn_ = _tile(n, bn, 8)
+    bk_ = _tile(k, bk, 128)   # keeps plane tile rows (bk//8) a sublane multiple
+    bm_ = _tile(m, bm, 128)
+
+    a_q = _pad_to(_pad_to(a_q, 0, bn_), 1, bk_)
+    a_scale = _pad_to(a_scale, 0, bn_)
+    # Padded K rows decode to sign=0,zero=0 => weight +1, but the matching
+    # activation rows are zero-padded so they contribute nothing.  Padded M
+    # columns are sliced off below.
+    sign = _pad_to(_pad_to(tw.sign_plane, 0, bk_ // 8), 1, bm_)
+    zero = _pad_to(_pad_to(tw.zero_plane, 0, bk_ // 8), 1, bm_)
+    wsc = _pad_to(tw.scale, 0, bm_)
+
+    y = _mxu_kernel.tsar_matmul_packed(
+        a_q, a_scale, sign, zero, wsc,
+        bn=bn_, bk=bk_, bm=bm_, dataflow=dataflow, interpret=interpret,
+    )
+    return y[:n, :m].reshape(lead + (m,))
+
+
+def tsar_lut_gemv(
+    x: jax.Array,
+    idx_pos: jax.Array,
+    idx_zero: jax.Array,
+    w_scale: jax.Array,
+    *,
+    c: int = 4,
+    bb: int = 128,
+    bm: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """BitLinear GEMV via the paper-faithful in-VMEM LUT kernel.
+
+    ``x`` (..., K) float -> (..., M) float32.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    blocks, m = idx_pos.shape
+    k = blocks * c
+    lead = x.shape[:-1]
+    n = 1
+    for d in lead:
+        n *= d
+    x2 = x.reshape(n, k).astype(jnp.float32)
+
+    bb_ = _tile(blocks, bb, 8)
+    bm_ = _tile(m, bm, 128)
+
+    # Padded activation channels are zero, so padded-block LUT entries are all
+    # zero and any index gathers 0 — padding is exact.
+    x2 = _pad_to(x2, 1, bb_ * c)
+    ip = _pad_to(_pad_to(idx_pos, 0, bb_), 1, bm_)
+    iz = _pad_to(_pad_to(idx_zero, 0, bb_), 1, bm_)
+    wsc = _pad_to(w_scale, 0, bm_)
+
+    y = _lut_kernel.tsar_lut_gemv(
+        x2, ip, iz, wsc, c=c, bb=bb_, bm=bm_, interpret=interpret
+    )
+    return y[:, :m].reshape(lead + (m,))

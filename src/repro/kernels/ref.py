@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the T-SAR Pallas kernels.
+
+Every kernel in this package is validated against these references with
+``interpret=True`` shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+
+def ternary_matmul_ref(a: jax.Array, t: jax.Array, w_scale: jax.Array | None = None) -> jax.Array:
+    """Dense fp32 oracle: (..., K) x ternary (K, M) -> (..., M)."""
+    y = a.astype(jnp.float32) @ t.astype(jnp.float32)
+    if w_scale is not None:
+        y = y * w_scale.astype(jnp.float32)
+    return y
+
+
+def packed_matmul_ref(a: jax.Array, tw: ternary.TernaryWeights) -> jax.Array:
+    """Oracle for the packed path: unpack bitplanes, dense matmul, dequant."""
+    t = ternary.unpack(tw)
+    return ternary_matmul_ref(a, t, tw.scale)
+
+
+def quantized_matmul_ref(a: jax.Array, tw: ternary.TernaryWeights) -> jax.Array:
+    """Oracle with the exact int8-quantized activation pipeline the production
+    kernel implements (quant -> int32 matmul -> dequant)."""
+    a_q, a_scale = ternary.quantize_activations(a.astype(jnp.float32))
+    t = ternary.unpack(tw)
+    acc = jax.lax.dot_general(
+        a_q, t,
+        dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * a_scale * tw.scale

@@ -1,0 +1,110 @@
+"""Paper-faithful T-SAR LUT kernel: in-VMEM TLUT build + TGEMV consume.
+
+This kernel is the literal transcription of the paper's two-instruction
+pipeline onto Pallas/TPU:
+
+* **TLUT_cxs** (Fig. 6(b)) — for every activation block of size ``c``, build
+  the shared binary LUT ``S[p] = sum_i bit_i(p) * a_i`` (2^c entries).  Here
+  that is a tiny (c -> 2^c) matmul executed in VMEM scratch; the LUT never
+  exists outside the kernel, exactly like the YMM-resident tables.
+* **TGEMV_kxm** (Fig. 6(c)) — consume the LUTs against pre-encoded weight
+  indices with fused accumulation.  A gather from a 2^c-entry table is, on
+  TPU, a one-hot (2^c-wide) matmul — the MXU plays the role of the SIMD
+  adder trees.  We fuse the paper's two gathers (dense/sparse planes) into a
+  single combined one-hot operand: ``comb = 2*onehot(idx_pos) +
+  onehot(idx_zero)`` so that ``y_block = S_b @ comb_b - sum(a_block)``
+  (DESIGN.md Sec. 2.1 single-LUT identity).
+
+Grid: (m_tiles, b_tiles) with the block axis innermost; the (N, bm) f32
+accumulator lives in VMEM scratch and is written back once (fused
+accumulation, no intermediate write-back — the OP dataflow of Fig. 7(b)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, ipos_ref, izero_ref, wsc_ref, o_ref, acc_ref, *,
+            c: int, b_steps: int):
+    bstep = pl.program_id(1)
+
+    @pl.when(bstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n = a_ref.shape[0]
+    bb = ipos_ref.shape[0]          # blocks in this tile
+    lut_w = 1 << c
+
+    # ---- TLUT: build shared binary LUTs in VMEM -------------------------
+    a_blocks = a_ref[...].reshape(n, bb, c)
+    # bits[p, i] = bit_i(p), built in-kernel via iota (no captured constants).
+    p_iota = jax.lax.broadcasted_iota(jnp.int32, (lut_w, c), 0)
+    i_iota = jax.lax.broadcasted_iota(jnp.int32, (lut_w, c), 1)
+    bits = ((p_iota >> i_iota) & 1).astype(jnp.float32)           # (2^c, c)
+    s = jax.lax.dot_general(                                       # (n, bb, 2^c)
+        a_blocks, bits,
+        dimension_numbers=(((2,), (1,)), ((), ())),
+    )
+    tot = jnp.sum(a_blocks, axis=(1, 2))                           # (n,)
+
+    # ---- TGEMV: combined one-hot gather + fused accumulation ------------
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bb, lut_w, 1), 1)
+    ip = ipos_ref[...].astype(jnp.int32)[:, None, :]               # (bb, 1, bm)
+    iz = izero_ref[...].astype(jnp.int32)[:, None, :]
+    comb = (2.0 * (iota == ip) + 1.0 * (iota == iz)).astype(jnp.float32)
+    # y[n, m] += sum_b S[n, b, :] @ comb[b, :, m]
+    contrib = jax.lax.dot_general(
+        s, comb,
+        dimension_numbers=(((2,), (1,)), ((1,), (0,))),            # batch over b
+    )                                                              # (bb, n, bm)
+    acc_ref[...] += jnp.sum(contrib, axis=0) - tot[:, None]
+
+    @pl.when(bstep == b_steps - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...] * wsc_ref[...].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "bb", "bm", "interpret")
+)
+def tsar_lut_gemv(
+    a: jax.Array,          # f32 (N, K) — N small (decode batch)
+    idx_pos: jax.Array,    # uint8 (K//c, M)
+    idx_zero: jax.Array,   # uint8 (K//c, M)
+    w_scale: jax.Array,    # f32 (M,)
+    *,
+    c: int = 4,
+    bb: int = 128,         # blocks per tile (bb*c input channels)
+    bm: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """(N, K) x encoded ternary (K, M) -> (N, M) f32 via in-VMEM LUTs.
+
+    Caller guarantees (K//c) % bb == 0 and M % bm == 0 (ops.py pads).
+    """
+    n, k = a.shape
+    blocks, m = idx_pos.shape
+    assert blocks * c == k, (blocks, c, k)
+    b_t, m_t = blocks // bb, m // bm
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, c=c, b_steps=b_t),
+        grid=(m_t, b_t),
+        in_specs=[
+            pl.BlockSpec((n, bb * c), lambda mi, bi: (0, bi)),
+            pl.BlockSpec((bb, bm), lambda mi, bi: (bi, mi)),
+            pl.BlockSpec((bb, bm), lambda mi, bi: (bi, mi)),
+            pl.BlockSpec((1, bm), lambda mi, bi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((n, bm), lambda mi, bi: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, bm), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), idx_pos, idx_zero, w_scale.reshape(1, m))
+    return out

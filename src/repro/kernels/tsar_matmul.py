@@ -1,0 +1,139 @@
+"""Production T-SAR kernel: packed-ternary matmul, decode-in-VMEM -> MXU.
+
+This is the TPU-native realization of the paper's in-register dataflow
+(DESIGN.md Sec. 2): the 2-bit weight bitplanes are the ONLY weight bytes that
+cross HBM; they are expanded to {-1,0,+1} int8 values inside VMEM, right next
+to the MXU, and consumed immediately — the exact analogue of TLUT/TGEMV
+building and consuming tables inside the SIMD register file instead of DRAM.
+
+Dataflow (paper Sec. III-D) maps to the grid iteration order:
+
+* AP (activation-persistent): grid = (n, m, k) — the activation tile loaded
+  for an ``n`` index is reused across all ``m`` tiles before moving on.
+* OP (output-persistent): grid = (m, n, k) — the output accumulator for an
+  ``m`` tile is completed before any other output tile is touched, and
+  weight-plane tiles are reused across ``n``.
+
+``k`` is always innermost: partial products accumulate in an int32 VMEM
+scratch and the output is written once, on the final ``k`` step (the paper's
+fused accumulation — no intermediate write-back).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PACK = 8
+
+
+def _unpack_plane(plane: jax.Array, bk: int) -> jax.Array:
+    """(bk//8, bm) uint8 -> (bk, bm) int8 {0,1}, LSB-first (matches
+    repro.core.ternary._pack_bits)."""
+    shifts = jnp.arange(PACK, dtype=jnp.uint8)[None, :, None]
+    bits = (plane[:, None, :] >> shifts) & jnp.uint8(1)
+    return bits.reshape(bk, plane.shape[-1]).astype(jnp.int8)
+
+
+def _kernel(a_ref, sign_ref, zero_ref, asc_ref, wsc_ref, o_ref, acc_ref, *,
+            k_steps: int, k_axis: int):
+    """One (bn, bm, bk) tile step."""
+    kstep = pl.program_id(k_axis)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bk = a_ref.shape[-1]
+    sign = _unpack_plane(sign_ref[...], bk)   # 1 => weight < 0
+    zero = _unpack_plane(zero_ref[...], bk)   # 1 => weight == 0
+    # vals = (1 - 2*sign) * (1 - zero) in {-1, 0, +1}
+    vals = ((1 - 2 * sign) * (1 - zero)).astype(jnp.int8)
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], vals,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(kstep == k_steps - 1)
+    def _finish():
+        o_ref[...] = (
+            acc_ref[...].astype(jnp.float32)
+            * asc_ref[...].astype(jnp.float32)          # (bn, 1) per-token
+            * wsc_ref[...].astype(jnp.float32)          # (1, bm) per-channel
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bn", "bk", "bm", "dataflow", "interpret"),
+)
+def tsar_matmul_packed(
+    a_q: jax.Array,        # int8 (N, K)
+    a_scale: jax.Array,    # f32  (N, 1)
+    sign_plane: jax.Array, # uint8 (K//8, M)
+    zero_plane: jax.Array, # uint8 (K//8, M)
+    w_scale: jax.Array,    # f32  (M,)
+    *,
+    bn: int = 128,
+    bk: int = 512,
+    bm: int = 256,
+    dataflow: str = "AP",
+    interpret: bool = False,
+) -> jax.Array:
+    """(N, K) int8 x packed ternary (K, M) -> (N, M) f32.
+
+    Caller guarantees N % bn == K % bk == M % bm == 0 (ops.py pads).
+    """
+    n, k = a_q.shape
+    m = sign_plane.shape[1]
+    n_t, k_t, m_t = n // bn, k // bk, m // bm
+
+    if dataflow == "AP":
+        grid = (n_t, m_t, k_t)
+        nm = lambda i, j, s: (i, j)          # grid ids -> (n_idx, m_idx)
+    elif dataflow == "OP":
+        grid = (m_t, n_t, k_t)
+        nm = lambda i, j, s: (j, i)
+    else:
+        raise ValueError(f"dataflow must be AP or OP, got {dataflow!r}")
+    k_axis = 2
+
+    def a_map(i, j, s):
+        ni, _ = nm(i, j, s)
+        return (ni, s)
+
+    def plane_map(i, j, s):
+        _, mi = nm(i, j, s)
+        return (s, mi)
+
+    def asc_map(i, j, s):
+        ni, _ = nm(i, j, s)
+        return (ni, 0)
+
+    def wsc_map(i, j, s):
+        _, mi = nm(i, j, s)
+        return (0, mi)
+
+    def o_map(i, j, s):
+        return nm(i, j, s)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_t, k_axis=k_axis),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), a_map),
+            pl.BlockSpec((bk // PACK, bm), plane_map),
+            pl.BlockSpec((bk // PACK, bm), plane_map),
+            pl.BlockSpec((bn, 1), asc_map),
+            pl.BlockSpec((1, bm), wsc_map),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), o_map),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bm), jnp.int32)],
+        interpret=interpret,
+    )(a_q, sign_plane, zero_plane, a_scale, w_scale.reshape(1, m))
+    return out

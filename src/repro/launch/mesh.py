@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import; smoke tests
+see the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16 data x 16 model).  Multi-pod: 2 x 256.
+
+    The 'pod' axis stacks data parallelism across the DCN; gradient
+    all-reduce is the only collective that crosses it (see sharding rules).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh for scaling studies / tests."""
+    return jax.make_mesh(shape, axes)

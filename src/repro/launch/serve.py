@@ -1,0 +1,53 @@
+"""Production serving driver: packed 2-bit T-SAR weights, batched requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch bitnet-2b-4t --smoke \
+        --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+import repro.configs as configs
+from repro.models import model_zoo as zoo
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--no-packed", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_len=args.max_len,
+                           batch_slots=args.slots, packed=not args.no_packed)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=4 + i % 8),
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature)
+            for i in range(args.requests)]
+    engine.run(reqs)
+    for r in reqs[:4]:
+        print(f"req {r.uid}: {r.out_tokens}")
+    print(f"prefill {engine.stats['prefill_s']:.2f}s | "
+          f"decode {engine.stats['decode_s']:.2f}s | "
+          f"{engine.throughput():.1f} tok/s steady-state "
+          f"({'packed 2-bit' if not args.no_packed else 'latent fp'})")
+
+
+if __name__ == "__main__":
+    main()

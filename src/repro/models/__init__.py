@@ -1,0 +1,3 @@
+"""Model zoo: composable ternary-LLM architectures (dense / MoE / SSM /
+hybrid / enc-dec / VLM) built on BitLinear."""
+from repro.models import model_zoo  # noqa: F401

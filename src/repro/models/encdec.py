@@ -1,0 +1,193 @@
+"""Encoder-decoder backbone (whisper-tiny family).
+
+Audio conv frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, enc_seq, d_model) from ``input_specs()``.
+Encoder = non-causal self-attention stack; decoder = causal self-attention +
+cross-attention + MLP.  Decode caches: self-attn KV (ring of max_len) plus
+cross-attn KV precomputed once at prefill from the encoder output.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _init_enc_block(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model),
+        "attn": layers.init_attention(k1, cfg),
+        "ln2": layers.init_rmsnorm(cfg.d_model),
+        "mlp": layers.init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_block(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_rmsnorm(cfg.d_model),
+        "attn": layers.init_attention(k1, cfg),
+        "ln_x": layers.init_rmsnorm(cfg.d_model),
+        "xattn": layers.init_attention(k2, cfg, cross=True),
+        "ln2": layers.init_rmsnorm(cfg.d_model),
+        "mlp": layers.init_mlp(k3, cfg),
+    }
+
+
+def init_params(cfg, key) -> dict:
+    ke, kd, kemb = jax.random.split(key, 3)
+    enc = [_init_enc_block(k, cfg) for k in jax.random.split(ke, cfg.n_enc_layers)]
+    dec = [_init_dec_block(k, cfg) for k in jax.random.split(kd, cfg.n_layers)]
+    return {
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "embed": jax.random.normal(kemb, (cfg.padded_vocab, cfg.d_model), jnp.float32) * 0.02,
+        "ln_enc": layers.init_rmsnorm(cfg.d_model),
+        "ln_f": layers.init_rmsnorm(cfg.d_model),
+    }
+
+
+def encode(cfg, params, frames: jax.Array, train: bool = True) -> jax.Array:
+    """frames (B, T, D) stub embeddings -> encoder states (B, T, D)."""
+    x = frames.astype(jnp.float32)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, _ = layers.attention(cfg, p["attn"], h, pos=pos, is_global=True,
+                                causal=False, train=train)
+        x = x + a
+        h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, train), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def _dec_block(cfg, p, x, enc_out, *, pos, train, mode, cache=None, cache_len=None):
+    new_cache: dict = {}
+    h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        a, ac = layers.attention(cfg, p["attn"], h, pos=pos, is_global=True,
+                                 cache={"k": cache["k"], "v": cache["v"]},
+                                 cache_len=cache_len, train=train)
+        new_cache.update(ac)
+    elif mode == "prefill":
+        a, (k, v) = layers.attention(cfg, p["attn"], h, pos=pos, is_global=True,
+                                     train=train, return_kv=True)
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    else:
+        a, _ = layers.attention(cfg, p["attn"], h, pos=pos, is_global=True, train=train)
+    x = x + a
+
+    h = layers.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    if mode == "decode":
+        # Cross-KV was computed at prefill; attend directly (no update).
+        xa = _cross_from_cache(cfg, p["xattn"], h, cache["xk"], cache["xv"], train)
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    else:
+        xa, (xk, xv) = layers.attention(cfg, p["xattn"], h, pos=pos, is_global=True,
+                                        kv_x=enc_out, causal=False, train=train,
+                                        return_kv=True)
+        if mode == "prefill":
+            new_cache["xk"], new_cache["xv"] = (
+                xk.astype(cache["xk"].dtype), xv.astype(cache["xv"].dtype))
+    x = x + xa
+
+    h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + layers.mlp(p["mlp"], h, train), (new_cache or None)
+
+
+def _cross_from_cache(cfg, p, x, xk, xv, train):
+    """Cross-attention against precomputed encoder K/V."""
+    h_, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h_ // hk
+    b, s, _ = x.shape
+    q = layers.linear(p["wq"], x, train).reshape(b, s, hk, g, dh)
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, xk.astype(q.dtype)) / math.sqrt(dh)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhgst,bthd->bshgd", probs, xv.astype(probs.dtype))
+    return layers.linear(p["wo"], ctx.reshape(b, s, h_ * dh), train)
+
+
+def forward(cfg, params, batch, train: bool = True, remat: bool = False):
+    enc_out = encode(cfg, params, batch["frames"], train)
+    x = (params["embed"][batch["tokens"]] * math.sqrt(cfg.d_model)).astype(jnp.float32)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        x, _ = _dec_block(cfg, p, x, enc_out, pos=pos, train=train, mode="fwd")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return _head(cfg, params, x), jnp.float32(0.0)
+
+
+def _head(cfg, params, x):
+    from repro.utils.act_sharding import constrain
+
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = constrain(x @ constrain(params["embed"], "vocab_rows").T, "logits")
+    if cfg.padded_vocab != cfg.vocab_size:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def loss_fn(cfg, params, batch, train: bool = True, remat: bool = False):
+    logits, aux = forward(cfg, params, batch, train, remat=remat)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll, {"nll": nll, "aux": aux}
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=jnp.float32) -> dict:
+    l, hk, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    t = cfg.enc_seq
+    return {
+        "k": jnp.zeros((l, batch_size, max_len, hk, dh), dtype),
+        "v": jnp.zeros((l, batch_size, max_len, hk, dh), dtype),
+        "xk": jnp.zeros((l, batch_size, t, hk, dh), dtype),
+        "xv": jnp.zeros((l, batch_size, t, hk, dh), dtype),
+    }
+
+
+def prefill(cfg, params, batch, cache: dict, train: bool = False):
+    enc_out = encode(cfg, params, batch["frames"], train)
+    x = (params["embed"][batch["tokens"]] * math.sqrt(cfg.d_model)).astype(jnp.float32)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, xs):
+        p, cache_l = xs
+        x, nc = _dec_block(cfg, p, x, enc_out, pos=pos, train=train,
+                           mode="prefill", cache=cache_l)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    return _head(cfg, params, x[:, -1:, :]), new_cache
+
+
+def decode_step(cfg, params, tokens, cache: dict, t, train: bool = False):
+    x = (params["embed"][tokens] * math.sqrt(cfg.d_model)).astype(jnp.float32)
+    pos = jnp.asarray(t)[None]
+
+    def body(x, xs):
+        p, cache_l = xs
+        x, nc = _dec_block(cfg, p, x, None, pos=pos, train=train,
+                           mode="decode", cache=cache_l, cache_len=t)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    return _head(cfg, params, x), new_cache

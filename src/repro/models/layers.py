@@ -1,0 +1,292 @@
+"""Shared transformer building blocks (pure functional JAX).
+
+Conventions:
+* Params are plain dict pytrees; ``init_*`` builds them, ``*_forward`` applies.
+* Every projection goes through :func:`linear`, which dispatches on the param
+  dict: ``{'w'}`` = ternary BitLinear latent weights (QAT fake-quant forward),
+  ``{'sign','zero','scale'}`` = frozen packed T-SAR weights (2-bit HBM
+  residency — the inference path), ``{'wd'}`` = plain dense fp (embeddings,
+  router, frontends, and all weights when cfg.ternary=False).
+* Attention supports GQA, RoPE, sliding-window vs global masking (blended by
+  a per-layer flag so heterogeneous stacks can be lax.scan'ed), qk-norm,
+  attention/logit softcaps, cross-attention, and single-token decode against
+  a KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitlinear, lut, ternary
+from repro.utils.act_sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Linear dispatch
+# ---------------------------------------------------------------------------
+
+def init_linear(key, k: int, m: int, ternary_layer: bool = True, dtype=jnp.float32) -> dict:
+    if ternary_layer:
+        return bitlinear.init(key, k, m, dtype)
+    w = jax.random.normal(key, (k, m), dtype) * (1.0 / jnp.sqrt(k))
+    return {"wd": w}
+
+
+def linear(p: dict, x: jax.Array, train: bool = True) -> jax.Array:
+    if "wd" in p:
+        return x @ p["wd"].astype(x.dtype)
+    if "w" in p:  # BitLinear latent weights
+        if train:
+            return bitlinear.apply_train(p, x)
+        t, scale = ternary.absmean_ternarize(p["w"])
+        return (lut.bitlinear_matmul_exact_int(x, t, scale)).astype(x.dtype)
+    if "sign" in p:  # frozen packed planes: decode-in-fast-memory path
+        return _packed_linear(p, x).astype(x.dtype)
+    raise ValueError(f"unrecognized linear params: {list(p)}")
+
+
+def _packed_linear(p: dict, x: jax.Array) -> jax.Array:
+    """Inference forward from 2-bit planes.
+
+    The only weight bytes read are the two uint8 bitplanes (+ per-channel
+    scales): this is what makes the serve-path HBM traffic 8x smaller than
+    bf16 and what the dry-run roofline measures.  On TPU the same math runs
+    in the fused Pallas kernel (repro.kernels); this jnp spelling lowers to
+    the identical decode->MXU dataflow and is SPMD-shardable.
+    """
+    k = x.shape[-1]
+    sign = _unpack_plane_nd(p["sign"], k)   # int8 {0,1}
+    zero = _unpack_plane_nd(p["zero"], k)
+    t = ((1 - 2 * sign) * (1 - zero)).astype(jnp.int8)
+    a_q, a_scale = ternary.quantize_activations(x.astype(jnp.float32))
+    acc = jax.lax.dot_general(
+        a_q, t,
+        dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * a_scale * p["scale"]
+
+
+def _unpack_plane_nd(plane: jax.Array, k: int) -> jax.Array:
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape((1, 8) + (1,) * (plane.ndim - 1))
+    bits = (plane[:, None] >> shifts) & jnp.uint8(1)
+    return bits.reshape((k,) + plane.shape[1:]).astype(jnp.int8)
+
+
+def pack_linear(p: dict) -> dict:
+    """Freeze one linear layer's latent weights to 2-bit planes (+ scale)."""
+    if "w" not in p:
+        return p
+    t, scale = ternary.absmean_ternarize(p["w"])
+    tw = ternary.pack(t, scale)
+    return {"sign": tw.sign_plane, "zero": tw.zero_plane, "scale": tw.scale}
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> dict:
+    return {"g": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["g"])).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x (..., S, H, Dh), pos (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[..., None].astype(jnp.float32) * freqs           # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+# Query-block size for the scanned long-sequence attention path; bounds the
+# transient (Sq, T) score tile at B*H*Q_CHUNK*T elements per layer.
+Q_CHUNK = 1024
+
+
+def init_attention(key, cfg, cross: bool = False) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    tern = cfg.ternary
+    p = {
+        "wq": init_linear(ks[0], d, h * dh, tern),
+        "wk": init_linear(ks[1], d, hk * dh, tern),
+        "wv": init_linear(ks[2], d, hk * dh, tern),
+        "wo": init_linear(ks[3], h * dh, d, tern),
+    }
+    if cfg.qk_norm and not cross:
+        p["qn"] = init_rmsnorm(dh)
+        p["kn"] = init_rmsnorm(dh)
+    return p
+
+
+def _split_heads(x, n_heads, dh):
+    return x.reshape(x.shape[:-1] + (n_heads, dh))
+
+
+def attention(
+    cfg,
+    p: dict,
+    x: jax.Array,                    # (B, S, D) queries' residual stream
+    *,
+    pos: jax.Array,                  # (S,) absolute positions of the queries
+    is_global,                       # bool / 0-1 scalar; blends window mask
+    kv_x: jax.Array | None = None,   # cross-attention source (B, T, D)
+    causal: bool = True,
+    cache: dict | None = None,       # {'k','v'} (B, S_max, Hkv, Dh) decode cache
+    cache_len: jax.Array | None = None,  # valid prefix length (== pos of new tok)
+    train: bool = True,
+    return_kv: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """Returns (out (B,S,D), updated cache / (k, v) / None)."""
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    b, s, _ = x.shape
+
+    q = _split_heads(linear(p["wq"], x, train), h, dh)       # (B,S,H,Dh)
+    if kv_x is None:
+        k = _split_heads(linear(p["wk"], x, train), hk, dh)  # (B,S,Hk,Dh)
+        v = _split_heads(linear(p["wv"], x, train), hk, dh)
+    else:
+        k = _split_heads(linear(p["wk"], kv_x, train), hk, dh)
+        v = _split_heads(linear(p["wv"], kv_x, train), hk, dh)
+
+    if "qn" in p:
+        q = rmsnorm(p["qn"], q, cfg.norm_eps)
+        k = rmsnorm(p["kn"], k, cfg.norm_eps)
+
+    use_rope = kv_x is None  # no RoPE on cross-attention
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)  # new token(s) at absolute pos in decode
+    # Pin head-sharded layouts: without this XLA's propagation is free to
+    # replicate batch / split heads unevenly (observed 50 GB score temps).
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+
+    new_cache = None
+    if cache is not None:
+        # Decode: write new K/V at position cache_len, attend over the prefix.
+        start = cache_len
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, start, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        t = k.shape[1]
+        kpos = jnp.arange(t)
+        valid = kpos <= cache_len                           # causal over prefix+new
+        if cfg.window_pattern:
+            in_win = kpos > (cache_len - cfg.window_size)
+            valid = valid & (jnp.asarray(is_global, bool) | in_win)
+        mask = valid[None, None, None, None, :]             # (1,1,1,S=1,T)
+    else:
+        t = k.shape[1]
+        if causal and kv_x is None:
+            qpos = pos[:, None]
+            kpos = pos[None, :]
+            m = kpos <= qpos
+            if cfg.window_pattern:
+                in_win = kpos > (qpos - cfg.window_size)
+                m = m & (jnp.asarray(is_global, bool) | in_win)
+            mask = m[None, None, None, :, :]
+        else:
+            mask = None
+
+    qg = q.reshape(b, s, hk, g, dh)
+
+    def attend(qc, maskc):
+        """One query block against the full K/V.  qc (B,Sq,Hk,G,Dh).
+
+        The query block is re-constrained INSIDE the scan body: the scanned
+        chunk axis cannot be sharded (scan iterates it), so without this the
+        whole attention replicates across 'model' whenever heads < |model|
+        (measured 16x wasted compute on whisper/gemma prefill — §Perf iter 2).
+        """
+        sq = qc.shape[1]
+        qc = constrain(qc.reshape(b, sq, hk * g, dh), "attn_q").reshape(qc.shape)
+        scores = jnp.einsum("bshgd,bthd->bhgst", qc, k.astype(qc.dtype)) / jnp.sqrt(
+            jnp.float32(dh)).astype(x.dtype)
+        scores = softcap(scores, cfg.attn_softcap)
+        if maskc is not None:
+            scores = jnp.where(maskc, scores, jnp.finfo(scores.dtype).min)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        ctxc = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(probs.dtype))
+        return constrain(ctxc.reshape(b, sq, hk * g, dh), "attn_q").reshape(ctxc.shape)
+
+    # Long sequences: scan over query blocks so the (Sq, T) score tile is
+    # bounded (flash-attention-style working set; exact math since each query
+    # block sees its full key row).  Peak scores memory: B*H*Q_CHUNK*T.
+    if s > Q_CHUNK and s % Q_CHUNK == 0 and mask is not None:
+        nq = s // Q_CHUNK
+        qb = qg.reshape(b, nq, Q_CHUNK, hk, g, dh)
+        mb = mask.reshape(1, 1, 1, nq, Q_CHUNK, t) if mask is not None else None
+
+        # Per-chunk remat: without it the scan saves every chunk's (QC, T)
+        # score tile for backward, reconstituting the full S x T matrix.
+        @jax.checkpoint
+        def body(_, inp):
+            qc, mc = inp
+            return None, attend(qc, mc)
+
+        # mask chunk (1,1,1,Q_CHUNK,T): moveaxis the nq dim to scan over.
+        qb_s = jnp.moveaxis(qb, 1, 0)                    # (nq, B, QC, Hk, G, Dh)
+        mb_s = jnp.moveaxis(mb, 3, 0)                    # (nq, 1, 1, 1, QC, T)
+        _, ctxs = jax.lax.scan(body, None, (qb_s, mb_s))
+        ctx = jnp.moveaxis(ctxs, 0, 1).reshape(b, s, hk, g, dh)
+    else:
+        ctx = attend(qg, mask)
+    ctx = constrain(ctx.reshape(b, s, hk * g, dh), "attn_q").reshape(b, s, hk, g, dh)
+    out = linear(p["wo"], ctx.reshape(b, s, h * dh), train)
+    if return_kv:
+        return out, (k, v)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    tern = cfg.ternary
+    if cfg.mlp_gated:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": init_linear(k1, d, f, tern),
+            "w_up": init_linear(k2, d, f, tern),
+            "w_down": init_linear(k3, f, d, tern),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {"w_up": init_linear(k1, d, f, tern), "w_down": init_linear(k2, f, d, tern)}
+
+
+def mlp(p: dict, x: jax.Array, train: bool = True) -> jax.Array:
+    if "w_gate" in p:
+        return linear(p["w_down"], silu(linear(p["w_gate"], x, train)) * linear(p["w_up"], x, train), train)
+    return linear(p["w_down"], jax.nn.gelu(linear(p["w_up"], x, train)), train)

@@ -1,0 +1,90 @@
+"""Config -> model dispatch + input spec construction for every cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input — the dry-run lowers against these (no allocation ever happens for the
+full-size configs).  Modality frontends are stubs per the assignment: audio
+supplies frame embeddings, vision supplies patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, transformer
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    return _mod(cfg).init_params(cfg, key)
+
+
+def forward(cfg, params, batch, train=True, remat=False):
+    return _mod(cfg).forward(cfg, params, batch, train, remat=remat)
+
+
+def loss_fn(cfg, params, batch, train=True, remat=False):
+    return _mod(cfg).loss_fn(cfg, params, batch, train, remat=remat)
+
+
+def init_cache(cfg, batch_size, max_len, dtype=jnp.float32):
+    return _mod(cfg).init_cache(cfg, batch_size, max_len, dtype)
+
+
+def prefill(cfg, params, batch, cache, train=False):
+    return _mod(cfg).prefill(cfg, params, batch, cache, train)
+
+
+def decode_step(cfg, params, tokens, cache, t, train=False):
+    return _mod(cfg).decode_step(cfg, params, tokens, cache, t, train)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, dry-run contract)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, cache_dtype=jnp.bfloat16) -> dict:
+    """Model inputs for one (arch x shape) cell.
+
+    * train/prefill cells: full-sequence token batches (+ frontend stubs).
+      For VLM the patch tokens occupy the first ``frontend_seq`` positions of
+      the cell's seq_len budget, so total backbone length == shape.seq_len.
+    * decode cells: one new token per sequence + the KV/SSM caches sized to
+      shape.seq_len (``serve_step`` contract).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    specs: dict = {}
+
+    if kind in ("train", "prefill"):
+        s_text = s
+        if cfg.family == "vlm":
+            s_text = s - cfg.frontend_seq
+            specs["patches"] = _sds((b, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        specs["tokens"] = _sds((b, s_text), jnp.int32)
+        if kind == "train":
+            specs["labels"] = _sds((b, s_text), jnp.int32)
+        else:
+            # prefill also takes the cache it fills
+            specs["cache"] = jax.eval_shape(
+                lambda: init_cache(cfg, b, s, cache_dtype))
+    else:  # decode
+        specs["tokens"] = _sds((b, 1), jnp.int32)
+        specs["cache"] = jax.eval_shape(lambda: init_cache(cfg, b, s, cache_dtype))
+        specs["t"] = _sds((), jnp.int32)
+    return specs
+
+
+def param_specs(cfg: ModelConfig, key=None) -> dict:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)

@@ -1,0 +1,201 @@
+"""Mixture-of-Experts layer (shared + routed experts, top-k, capacity-based).
+
+GShard/Switch-style dispatch expressed entirely as einsums so XLA SPMD can
+shard it: tokens stay sharded on the batch ('data') axis, expert weight
+stacks are sharded on the expert axis ('model' — expert parallelism), and the
+token->expert redistribution materializes as the canonical all-to-all in the
+compiled collective schedule.
+
+Per the T-SAR applicability analysis (DESIGN.md §Arch-applicability): expert
+FFN weights are ternary BitLinear; the router stays fp (it is <0.1 % of
+parameters and accuracy-critical — same choice BitNet makes for norms).
+
+Capacity grouping: each batch row dispatches independently with capacity
+``C = ceil(S * top_k * capacity_factor / E)`` so the dispatch tensor is
+(B, S, E, C) — sharded over both B and E it stays small at any scale.
+Overflow tokens are dropped (standard), handled by the residual connection.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitlinear, ternary
+from repro.models import layers
+
+
+def init_moe(key, cfg) -> dict:
+    d = cfg.d_model
+    de = cfg.d_expert or cfg.d_ff
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    tern = cfg.ternary
+
+    def expert_stack(k, kin, kout, n):
+        # Stacked expert weights (n, kin, kout); BitLinear latent or dense.
+        w = jax.random.normal(k, (n, kin, kout), jnp.float32) * (1.0 / math.sqrt(kin))
+        return {"w": w} if tern else {"wd": w}
+
+    p = {
+        "router": {"wd": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02},
+        "w_gate": expert_stack(ks[1], d, de, e),
+        "w_up": expert_stack(ks[2], d, de, e),
+        "w_down": expert_stack(ks[3], de, d, e),
+    }
+    if cfg.n_shared_experts:
+        kk = jax.random.split(ks[4], 3)
+        ds = de * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": layers.init_linear(kk[0], d, ds, tern),
+            "w_up": layers.init_linear(kk[1], d, ds, tern),
+            "w_down": layers.init_linear(kk[2], ds, d, tern),
+        }
+    return p
+
+
+def _expert_weights(p: dict, train: bool) -> jax.Array:
+    """Materialize effective expert weights (E, K, M) from latent/packed.
+
+    The packed branch decodes to bf16 (not f32 — the materialized decode is
+    transient and feeds bf16 einsums) and is pinned to the expert-sharded
+    layout: without the constraint XLA data-shards the unpack then
+    all-gathers 1.3 GB/layer of decoded weights (§Perf iter 4).
+    """
+    from repro.utils.act_sharding import constrain
+
+    if "wd" in p:
+        return p["wd"]
+    if "w" in p:
+        if train:
+            return bitlinear.ste_ternarize(p["w"])
+        t, scale = ternary.absmean_ternarize(p["w"])
+        return t * scale[..., None, :]
+    if "sign" in p:  # packed (E, K//8, M) planes — decode on the fly
+        e, kb, m = p["sign"].shape
+        k = kb * 8
+        unpack = jax.vmap(lambda s: layers._unpack_plane_nd(s, k))
+        sign = unpack(p["sign"])
+        zero = unpack(p["zero"])
+        t = ((1 - 2 * sign) * (1 - zero)).astype(jnp.bfloat16)
+        return constrain(t * p["scale"][:, None, :].astype(jnp.bfloat16),
+                         "expert_weights")
+    raise ValueError(f"unrecognized expert params: {list(p)}")
+
+
+# Dispatch-group size: tokens are regrouped into windows of at most this many
+# so the (groups, G, E, C) dispatch tensor stays O(tokens * G * cf) at any
+# sequence length (32k prefill would otherwise blow up quadratically).
+MAX_GROUP = 4096
+
+
+def _expert_ffn(cfg, p: dict, xe: jax.Array, train: bool) -> jax.Array:
+    """Routed-expert FFN on dispatched tokens xe (B, E, C, D) -> (B, E, C, D).
+
+    For frozen packed experts on a registered mesh, the unpack + matmuls run
+    inside a shard_map over 'model' (the EP axis): the 2-bit planes are
+    decoded strictly LOCALLY per expert shard.  Constraint hints alone lose
+    to the SPMD partitioner's cost model on 128-expert stacks — it data-
+    shards the decode then all-gathers 1.3 GB/layer of decoded weights
+    (§Perf iter 4 open item; this is the fix).
+    """
+    from repro.utils.act_sharding import _dax, _dsize, get_mesh
+
+    mesh = get_mesh()
+    packed = "sign" in p["w_gate"]
+    e = xe.shape[1]
+    use_local = (mesh is not None and packed and not train
+                 and e % mesh.shape["model"] == 0
+                 and xe.shape[0] % _dsize(mesh) == 0)
+
+    if not use_local:
+        wg = _expert_weights(p["w_gate"], train).astype(jnp.bfloat16)
+        wu = _expert_weights(p["w_up"], train).astype(jnp.bfloat16)
+        wd = _expert_weights(p["w_down"], train).astype(jnp.bfloat16)
+        h = layers.silu(jnp.einsum("becd,edf->becf", xe, wg)) * jnp.einsum(
+            "becd,edf->becf", xe, wu)
+        return jnp.einsum("becf,efd->becd", h, wd)
+
+    from jax.sharding import PartitionSpec as P
+
+    def local_block(xe_l, gs, gz, gsc, us, uz, usc, ds, dz, dsc):
+        dec = lambda s, z, sc: _decode_planes(s, z, sc)
+        wg, wu, wd = dec(gs, gz, gsc), dec(us, uz, usc), dec(ds, dz, dsc)
+        h = layers.silu(jnp.einsum("becd,edf->becf", xe_l, wg)) * jnp.einsum(
+            "becd,edf->becf", xe_l, wu)
+        return jnp.einsum("becf,efd->becd", h, wd)
+
+    # FULLY manual over (data..., model): with the data axes left 'auto' the
+    # partitioner still data-shards the weight decode inside the body and
+    # all-gathers 1.3 GB/layer of decoded weights at the dots.
+    dax = _dax(mesh)
+    ew = P("model", None, None)
+    esc = P("model", None)
+    fn = jax.shard_map(
+        local_block, mesh=mesh,
+        in_specs=(P(dax, "model", None, None),
+                  ew, ew, esc, ew, ew, esc, ew, ew, esc),
+        out_specs=P(dax, "model", None, None),
+        axis_names={"model", *dax}, check_vma=False)
+    return fn(xe,
+              p["w_gate"]["sign"], p["w_gate"]["zero"], p["w_gate"]["scale"],
+              p["w_up"]["sign"], p["w_up"]["zero"], p["w_up"]["scale"],
+              p["w_down"]["sign"], p["w_down"]["zero"], p["w_down"]["scale"])
+
+
+def _decode_planes(sign: jax.Array, zero: jax.Array, scale: jax.Array) -> jax.Array:
+    """(E_local, K//8, M) planes -> (E_local, K, M) bf16 effective weights."""
+    k = sign.shape[1] * 8
+    unpack = jax.vmap(lambda s: layers._unpack_plane_nd(s, k))
+    t = ((1 - 2 * unpack(sign)) * (1 - unpack(zero))).astype(jnp.bfloat16)
+    return t * scale[:, None, :].astype(jnp.bfloat16)
+
+
+def moe_forward(cfg, p: dict, x: jax.Array, train: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar)."""
+    b0, s0, d = x.shape
+    if s0 > MAX_GROUP and s0 % MAX_GROUP == 0:
+        x = x.reshape(b0 * (s0 // MAX_GROUP), MAX_GROUP, d)
+    b, s, _ = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    cap = max(1, math.ceil(s * k * cfg.capacity_factor / e))
+
+    gates = jax.nn.softmax(layers.linear(p["router"], x.astype(jnp.float32)), axis=-1)  # (B,S,E)
+    topw, topi = jax.lax.top_k(gates, k)                       # (B,S,k)
+    topw = topw / (jnp.sum(topw, axis=-1, keepdims=True) + 1e-9)
+
+    # Load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e.
+    me = jnp.mean(gates, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, e, dtype=gates.dtype), axis=2), axis=(0, 1)
+    )
+    aux = e * jnp.sum(me * ce)
+
+    # Position-in-expert via per-slot cumsum (slots processed in priority order).
+    dispatch = jnp.zeros((b, s, e, cap), jnp.bfloat16)
+    combine = jnp.zeros((b, s, e, cap), jnp.float32)
+    counts = jnp.zeros((b, 1, e), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(topi[..., j], e, dtype=jnp.int32)  # (B,S,E)
+        pos_in_e = jnp.cumsum(oh, axis=1) - 1 + counts         # (B,S,E)
+        counts = counts + jnp.sum(oh, axis=1, keepdims=True)
+        keep = (pos_in_e < cap) & (oh > 0)
+        slot = jax.nn.one_hot(jnp.where(keep, pos_in_e, -1), cap, dtype=jnp.bfloat16)
+        sel = slot * oh.astype(jnp.bfloat16)[..., None]        # (B,S,E,cap)
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) * topw[..., j, None, None]
+
+    from repro.utils.act_sharding import constrain
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x.astype(jnp.bfloat16))  # (B,E,C,D)
+    xe = constrain(xe, "moe")   # expert axis on 'model' => dispatch = all-to-all
+    out_e = _expert_ffn(cfg, p, xe, train)                     # (B,E,C,D)
+    out_e = constrain(out_e, "moe")
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(jnp.bfloat16), out_e)
+    y = y.astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + layers.mlp(p["shared"], x, train)
+    y = y.reshape(b0, s0, d)
+    return y, aux.astype(jnp.float32)

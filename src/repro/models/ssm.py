@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked, pure JAX.
+
+Implements the exact chunked SSD algorithm of arXiv:2405.21060: within-chunk
+terms are dense matmuls (MXU-friendly — the 'duality' with attention), the
+across-chunk recurrence is a short ``lax.scan`` over chunk states.  Decode is
+the O(1)-per-token recurrent step with a rolling depthwise-conv state.
+
+T-SAR applicability (DESIGN.md §Arch-applicability): the in/out projections
+are ternary BitLinear; the SSD recurrence itself involves no weight matrices
+(A is a per-head scalar decay, B/C are data-dependent) so the paper's
+technique does not apply there — it stays fp, as noted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_dim = di + 2 * n          # conv over (x, B, C), ngroups = 1
+    return di, n, nh, conv_dim
+
+
+def init_ssm(key, cfg) -> dict:
+    d = cfg.d_model
+    di, n, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    tern = cfg.ternary
+    # in_proj emits [z (di), x (di), B (n), C (n), dt (nh)]
+    d_in = 2 * di + 2 * n + nh
+    return {
+        "in_proj": layers.init_linear(ks[0], d, d_in, tern),
+        "out_proj": layers.init_linear(ks[1], di, d, tern),
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv_width, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),  # softplus^-1
+        "norm": layers.init_rmsnorm(di),
+    }
+
+
+def _split_in(cfg, zxbcdt):
+    di, n, nh, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    bs = zxbcdt[..., 2 * di:2 * di + n]
+    cs = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xs, bs, cs, dt
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., L) -> (..., L, L) lower-triangular cumulative segment sums:
+    out[i, j] = sum_{j < t <= i} x[t], -inf above the diagonal."""
+    ln = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(ln)
+    tri = i[:, None] >= i[None, :]
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_chunked(xd, a_dt, bmat, cmat, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xd   (B, S, H, P)  inputs pre-multiplied by dt
+    a_dt (B, S, H)     log-decay per step (= dt * A, negative)
+    bmat (B, S, N), cmat (B, S, N)  shared across heads (ngroups=1)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = xd.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = xd.reshape(b, nc, chunk, h, p)
+    ac = a_dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=2)                              # (B,C,L,H)
+    # Intra-chunk (diagonal) term: attention-like dense matmuls.
+    lmat = jnp.exp(_segsum(jnp.moveaxis(ac, -1, 2)))            # (B,C,H,L,L)
+    scores = jnp.einsum("bcln,bcsn->bcls", cc, bc)              # (B,C,L,S)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp", scores, lmat, xc)
+
+    # Chunk-final states: state_c = sum_l B_l x_l * exp(Acum_last - Acum_l)
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)         # (B,C,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc, decay_states, xc)
+
+    # Inter-chunk recurrence over the nc chunks.
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                   # (B,C,H)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), xd.dtype)
+
+    def step(carry, inp):
+        st, dec = inp                                           # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                       # emit state *entering* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # (B,C,H,P,N)
+
+    # Off-diagonal contribution from the state entering each chunk.
+    state_decay = jnp.exp(a_cum)                                # (B,C,L,H)
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp", cc, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_forward(cfg, p: dict, u: jax.Array, train: bool = True):
+    """Full-sequence forward. u (B, S, D) -> (y (B, S, D), final_ssm_state)."""
+    b, s, _ = u.shape
+    di, n, nh, conv_dim = _dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    z, xs, bs, cs, dt = _split_in(cfg, layers.linear(p["in_proj"], u, train))
+    xbc = jnp.concatenate([xs, bs, cs], axis=-1)                # (B,S,conv_dim)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = layers.silu(xbc)
+    xs, bs, cs = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                     # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                    # (H,) negative
+    xh = xs.reshape(b, s, nh, hd)
+    xd = xh * dt[..., None]
+    y, final = ssd_chunked(xd, dt * a, bs, cs, min(cfg.ssm_chunk, s))
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = layers.rmsnorm(p["norm"], y * layers.silu(z), cfg.norm_eps)
+    return layers.linear(p["out_proj"], y, train), final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
+    return out + bias
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    di, n, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), dtype),
+    }
+
+
+def ssm_decode_step(cfg, p: dict, u: jax.Array, cache: dict, train: bool = False):
+    """Single-token step. u (B, 1, D) -> (y (B, 1, D), new cache)."""
+    b = u.shape[0]
+    di, n, nh, conv_dim = _dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    z, xs, bs, cs, dt = _split_in(cfg, layers.linear(p["in_proj"], u[:, 0, :], train))
+    xbc = jnp.concatenate([xs, bs, cs], axis=-1)                # (B,conv_dim)
+
+    # Rolling conv state: window = [conv_state ; x_t]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.sum(win * p["conv_w"][None, :, :], axis=1) + p["conv_b"]
+    xbc = layers.silu(conv_out)
+    xs, bs, cs = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                     # (B,H)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))                    # (B,H) decay
+    xh = xs.reshape(b, nh, hd)
+    state = cache["state"] * a[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", bs, xh * dt[..., None]
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cs, state) + xh * p["D"][None, :, None]
+    y = y.reshape(b, di)
+    y = layers.rmsnorm(p["norm"], y * layers.silu(z), cfg.norm_eps)
+    out = layers.linear(p["out_proj"], y, train)[:, None, :]
+    return out, {"conv": win[:, 1:, :], "state": state}

@@ -1,0 +1,5 @@
+from repro.optim.optimizer import (  # noqa: F401
+    AdamWState, OptConfig, adamw_init, adamw_update, cosine_schedule,
+    global_norm,
+)
+from repro.optim import compression  # noqa: F401

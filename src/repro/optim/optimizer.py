@@ -1,0 +1,91 @@
+"""Pure-JAX optimizers (optax is not available offline): AdamW + schedules.
+
+``(init, update)`` pairs over arbitrary param pytrees, with global-norm
+clipping and decoupled weight decay.  Designed for pjit: the optimizer state
+mirrors the param sharding (same tree structure, same PartitionSpecs).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # 'bfloat16' halves optimizer-state HBM (needed to fit 400B-class train
+    # state on a single 256-chip pod); moments are accumulated in f32 then
+    # stored compressed.
+    moment_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array
+
+
+def cosine_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(math.pi * progress))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, moment_dtype), t)
+    return AdamWState(mu=zeros(params), nu=zeros(params), count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(cfg: OptConfig, grads, state: AdamWState, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    b1, b2 = cfg.betas
+    lr = cosine_schedule(cfg, count)
+    mdtype = jnp.dtype(cfg.moment_dtype)
+
+    mu = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(mdtype),
+        state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(mdtype),
+        state.nu, grads)
+    c = count.astype(jnp.float32)
+    mu_hat = jax.tree.map(lambda m: m.astype(jnp.float32) / (1 - b1 ** c), mu)
+    nu_hat = jax.tree.map(lambda v: v.astype(jnp.float32) / (1 - b2 ** c), nu)
+
+    def upd(p, m, v):
+        step = m / (jnp.sqrt(v) + cfg.eps)
+        # Decoupled weight decay on matrices only (ndim >= 2).
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr * (step + wd)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu_hat, nu_hat)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count), {"grad_norm": gnorm, "lr": lr}

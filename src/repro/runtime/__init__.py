@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    Heartbeat, RestartReport, StepMonitor, elastic_remesh_plan,
+    run_with_restarts,
+)

@@ -1,0 +1,132 @@
+"""Fault tolerance + elasticity primitives for long multi-pod runs.
+
+At 1000+ nodes the design assumptions are: (i) some host WILL fail during any
+multi-day run, (ii) stragglers are common (shared fabric, background daemons),
+(iii) capacity changes — you lose a pod and must keep training on what's left.
+The corresponding mechanisms here:
+
+* ``run_with_restarts`` — supervision loop: the train driver body is a
+  function of (state, start_step); on failure the loop restores the latest
+  checkpoint and re-enters.  Combined with checkpoint/restore's resharding
+  this covers both restart-in-place and restart-on-fewer-pods (elastic).
+* ``StepMonitor`` — per-step wall-time tracker with straggler detection
+  (step > factor x rolling median flags it; at scale this signal feeds the
+  scheduler to evict slow hosts; here it triggers logging + is unit-tested).
+* ``Heartbeat`` — liveness file another process can watch (the k8s/Borg
+  pattern); missed deadline = assume dead, trigger restart.
+* ``elastic_remesh_plan`` — given remaining device count, choose the largest
+  valid (data, model) submesh that keeps TP intact (shrink DP first: model
+  shards must stay complete, data replicas are fungible).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from dataclasses import dataclass
+
+
+class StepMonitor:
+    def __init__(self, window: int = 32, straggler_factor: float = 2.5):
+        self.times = deque(maxlen=window)
+        self.factor = straggler_factor
+        self.straggler_steps: list[int] = []
+        self._t0 = None
+        self._step = 0
+
+    def start(self, step: int):
+        self._step = step
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        is_straggler = False
+        if len(self.times) >= 8:
+            med = sorted(self.times)[len(self.times) // 2]
+            if dt > self.factor * med:
+                is_straggler = True
+                self.straggler_steps.append(self._step)
+        self.times.append(dt)
+        return dt if not is_straggler else dt
+
+    def is_straggler(self, dt: float) -> bool:
+        if len(self.times) < 8:
+            return False
+        med = sorted(self.times)[len(self.times) // 2]
+        return dt > self.factor * med
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        return sorted(self.times)[len(self.times) // 2]
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval_s: float = 10.0):
+        self.path = path
+        self.interval = interval_s
+        self._last = 0.0
+
+    def beat(self, step: int):
+        now = time.time()
+        if now - self._last >= self.interval:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"step": step, "time": now}, f)
+            os.replace(tmp, self.path)
+            self._last = now
+
+    @staticmethod
+    def is_alive(path: str, deadline_s: float = 60.0) -> bool:
+        try:
+            with open(path) as f:
+                beat = json.load(f)
+            return (time.time() - beat["time"]) < deadline_s
+        except (OSError, ValueError):
+            return False
+
+
+@dataclass
+class RestartReport:
+    restarts: int
+    completed: bool
+    last_step: int
+    failures: list
+
+
+def run_with_restarts(body, *, restore_fn, max_restarts: int = 3) -> RestartReport:
+    """Supervision loop.
+
+    ``body(state, start_step) -> final_step`` runs the training segment and
+    may raise; ``restore_fn() -> (state, step)`` reloads the latest
+    checkpoint.  Used directly by launch/train.py and by the fault-injection
+    tests (which raise at a chosen step to simulate a node loss).
+    """
+    failures = []
+    restarts = 0
+    state, step = restore_fn()
+    while True:
+        try:
+            final = body(state, step)
+            return RestartReport(restarts, True, final, failures)
+        except Exception as e:  # noqa: BLE001 — any worker failure
+            failures.append(repr(e))
+            restarts += 1
+            if restarts > max_restarts:
+                return RestartReport(restarts, False, step, failures)
+            state, step = restore_fn()
+
+
+def elastic_remesh_plan(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest (data, model) mesh on ``n_devices`` keeping TP width intact.
+
+    TP shards hold complementary weight slices — a partial model group is
+    useless — so shrink data parallelism first.  Returns (data, model).
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep TP={model_parallel} with {n_devices} devices; "
+            "re-plan with smaller model parallelism")
+    data = n_devices // model_parallel
+    return data, model_parallel

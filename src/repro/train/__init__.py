@@ -1,0 +1,5 @@
+from repro.train.train_loop import (  # noqa: F401
+    TrainState, init_state, jit_train_step, make_compressed_dp_train_step,
+    make_train_step,
+)
+from repro.train import sharding  # noqa: F401

@@ -1,0 +1,199 @@
+"""Partitioning rules: param/batch/cache PartitionSpecs for the 2-D/3-D mesh.
+
+Axes: ``data`` (+ ``pod`` stacked on top of it in multi-pod meshes) carry
+batch; ``model`` carries tensor parallelism (attention heads / FFN hidden /
+vocab) and expert parallelism (MoE expert axis).  Rules are path-based over
+the param pytree so they survive arbitrary stacking (the leading scan-layer
+axis is always replicated).
+
+Key choices (see EXPERIMENTS.md §Perf for measured effect):
+* column-parallel in-projections (wq/wk/wv/w_gate/w_up/in_proj) shard M,
+  row-parallel out-projections (wo/w_down/out_proj) shard K — the Megatron
+  pattern: one all-reduce per block instead of four.
+* embeddings shard the vocab axis; MoE expert stacks shard the expert axis
+  (EP); routers/norms/scalars replicate.
+* decode KV caches shard batch on 'data' when batch >= |data|, otherwise the
+  *sequence* axis (sequence parallelism for the long_500k single-request
+  cell).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --- param rules -----------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj"}    # shard out-features
+_ROW = {"wo", "w_down", "out_proj"}                        # shard in-features
+_REPL = {"router", "frontend_proj", "conv_w", "conv_b", "A_log", "D",
+         "dt_bias", "qn", "kn", "g"}
+
+
+def param_spec(path: tuple, leaf, fsdp: bool = False) -> P:
+    """PartitionSpec for one param leaf given its tree path (tuple of str).
+
+    ``fsdp=True`` additionally shards one free axis over the data axes
+    (weights are all-gathered per scanned layer at use — the standard
+    FSDP-in-SPMD pattern; required to fit 33B/400B-class training state).
+    """
+    names = [p for p in path if isinstance(p, str)]
+    leafname = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    ndim = leaf.ndim
+    spec = [None] * ndim
+
+    if leafname == "embed":
+        spec = ["model", None]
+        if fsdp:
+            spec[1] = "__data__"
+        return P(*spec)
+    if parent == "lm_head":
+        spec = [None, "model"]
+        if fsdp:
+            spec[0] = "__data__"
+        return P(*spec)
+    if any(n in _REPL for n in names):
+        return P(*spec)
+
+    # Expert stacks: (..., E, K, M) — the *expert* axis is the EP axis.
+    is_expert = (parent in ("w_gate", "w_up", "w_down") and ndim >= 3
+                 and "moe" in names and "shared" not in names)
+    if is_expert:
+        spec[-3] = "model"
+        if fsdp:
+            spec[-2] = "__data__"
+    elif parent in _COL and ndim >= 2:
+        spec[-1] = "model"
+        if fsdp:
+            spec[-2] = "__data__"
+    elif parent in _ROW and ndim >= 2:
+        spec[-2] = "model"
+        if fsdp:
+            spec[-1] = "__data__"
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh | None = None, fsdp: bool = False) -> dict:
+    """Pytree of PartitionSpecs matching ``params``.
+
+    When ``mesh`` is given, specs are sanitized: any sharded axis whose size
+    does not divide the mesh axes is dropped to replicated (handles e.g.
+    whisper's vocab=51865 or head counts < |model|), and the '__data__'
+    placeholder resolves to the mesh's (pod,)data axes.
+    """
+    specs = jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: param_spec(_keypath_names(kp), leaf, fsdp=fsdp), params
+    )
+    if mesh is not None:
+        specs = jax.tree.map(
+            lambda leaf, s: sanitize_spec(mesh, leaf.shape, s), params, specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return specs
+
+
+def sanitize_spec(mesh: Mesh, shape: tuple, spec: P) -> P:
+    """Drop shardings that don't divide; resolve the '__data__' placeholder."""
+    dax = _data_axes(mesh)
+    dsz = 1
+    for a in dax:
+        dsz *= mesh.shape[a]
+    out = []
+    for i, s in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        if s == "__data__":
+            out.append(dax if shape[i] % dsz == 0 else None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(s if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def _keypath_names(kp) -> tuple:
+    names = []
+    for k in kp:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+    return tuple(names)
+
+
+# --- batch / cache rules ----------------------------------------------------
+
+def batch_spec(mesh: Mesh, batch_size: int) -> P:
+    """Token batches: shard batch over the (pod, data) axes when divisible."""
+    dax = _data_axes(mesh)
+    total = 1
+    for a in dax:
+        total *= mesh.shape[a]
+    if batch_size % total == 0:
+        return P(dax, None)
+    return P(None, None)
+
+
+def batch_specs(mesh: Mesh, batch) -> dict:
+    """Specs for a batch dict: leading dim is batch for every leaf."""
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return P()
+        bs = leaf.shape[0]
+        lead = batch_spec(mesh, bs)
+        return P(*(tuple(lead)[:1] + (None,) * (nd - 1)))
+    return jax.tree.map(spec, batch)
+
+
+def cache_spec(mesh: Mesh, leaf_shape: tuple, n_kv_heads: int) -> P:
+    """KV/SSM cache leaves, stacked (L, B, ...).
+
+    (L, B, S, Hk, Dh) attention cache; (L, B, W, C) conv; (L, B, H, P, N) ssm.
+    Batch -> data axes when divisible, else sequence-parallel on axis 2.
+    Head axis -> 'model' when divisible.
+    """
+    dax = _data_axes(mesh)
+    dsz = 1
+    for a in dax:
+        dsz *= mesh.shape[a]
+    msz = mesh.shape["model"]
+    nd = len(leaf_shape)
+    spec = [None] * nd
+    b = leaf_shape[1]
+    if b % dsz == 0:
+        spec[1] = dax
+    elif nd >= 3 and leaf_shape[2] % dsz == 0:
+        spec[2] = dax            # sequence parallelism (long-context decode)
+    # Shard one inner axis on 'model': prefer heads, then the SEQUENCE axis,
+    # then head_dim.  Sequence beats head_dim when KV-heads don't divide:
+    # a Dh-sharded cache against head-sharded queries makes XLA all-gather
+    # the full cache every layer (measured 2.1 GB x 64 layers/step on qwen3
+    # decode — §Perf iter 3); a seq-sharded cache is the split-KV
+    # (flash-decoding) scheme: local partial softmax + tiny psum.
+    for ax in ((3, 2, 4) if nd == 5 else (3, 2) if nd == 4 else ()):
+        if ax < nd and spec[ax] is None and leaf_shape[ax] % msz == 0:
+            spec[ax] = "model"
+            break
+    return P(*spec)
+
+
+def cache_specs(mesh: Mesh, cache, n_kv_heads: int):
+    return jax.tree.map(lambda l: cache_spec(mesh, l.shape, n_kv_heads), cache)
+
+
+def to_named(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

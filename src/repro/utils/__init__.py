@@ -1,0 +1,1 @@
+from repro.utils import act_sharding  # noqa: F401

@@ -1,0 +1,91 @@
+"""BitLinear layer: QAT forward/backward, freezing, kernel dispatch,
+and the AP/OP dataflow selector."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitlinear, dataflow
+
+
+@pytest.fixture
+def setup():
+    key = jax.random.PRNGKey(0)
+    p = bitlinear.init(key, 128, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+    return p, x
+
+
+class TestQAT:
+    def test_train_close_to_eval(self, setup):
+        p, x = setup
+        y_train = bitlinear.apply_train(p, x)
+        y_eval = bitlinear.apply_eval(p, x)
+        np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_eval),
+                                   rtol=0.1, atol=0.1)
+
+    def test_ste_gradients_flow(self, setup):
+        p, x = setup
+
+        def loss(p):
+            return jnp.sum(bitlinear.apply_train(p, x) ** 2)
+
+        g = jax.grad(loss)(p)
+        assert g["w"].shape == p["w"].shape
+        assert float(jnp.max(jnp.abs(g["w"]))) > 0.0
+        assert not bool(jnp.any(jnp.isnan(g["w"])))
+
+    def test_ste_is_identity_through_quant(self):
+        """d/dw of ste_ternarize == identity (the STE contract)."""
+        w = jax.random.normal(jax.random.PRNGKey(3), (16, 8))
+        g = jax.grad(lambda w: jnp.sum(bitlinear.ste_ternarize(w) * 2.0))(w)
+        np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones_like(g), rtol=1e-6)
+
+
+class TestFrozen:
+    def test_all_kernels_agree(self, setup):
+        p, x = setup
+        fz = bitlinear.freeze(p)
+        outs = {k: bitlinear.apply_frozen(fz, x, kernel=k)
+                for k in ("tsar_lut", "tsar_mxu", "memory_lut", "dense")}
+        base = np.asarray(outs["dense"])
+        for k, v in outs.items():
+            np.testing.assert_allclose(np.asarray(v), base, rtol=0.05, atol=0.1,
+                                       err_msg=f"kernel {k} diverges")
+
+    def test_auto_dispatch_runs(self, setup):
+        p, x = setup
+        fz = bitlinear.freeze(p)
+        y = bitlinear.apply_frozen(fz, x, kernel="auto")
+        assert y.shape == (8, 64)
+
+    def test_packed_storage_is_2bit(self, setup):
+        p, _ = setup
+        fz = bitlinear.freeze(p)
+        weight_bits = 8 * (fz.packed.sign_plane.size + fz.packed.zero_plane.size)
+        assert weight_bits == 2 * 128 * 64
+
+
+class TestDataflowSelector:
+    def test_gemv_prefers_op(self):
+        """Decode (n=1, high M) -> output-persistent (paper Fig. 7(b))."""
+        choice = dataflow.select_kernel(n=1, k=2560, m=6912)
+        assert choice.dataflow == "OP"
+
+    def test_gemm_prefers_ap(self):
+        """Prefill (high N) -> activation-persistent (paper Fig. 7(a))."""
+        choice = dataflow.select_kernel(n=128, k=2560, m=6912)
+        assert choice.dataflow == "AP"
+
+    def test_gemv_is_memory_bound_gemm_compute_bound(self):
+        """The paper's central bottleneck claim, reproduced by the model."""
+        gemv = dataflow.select_kernel(n=1, k=8192, m=45568)
+        gemm = dataflow.select_kernel(n=128, k=2560, m=6912)
+        assert gemv.bound == "memory"
+        assert gemm.bound == "compute"
+
+    def test_layer_plan(self):
+        plan = dataflow.layer_plan({
+            "qkv": (1, 2560, 7680), "mlp_up": (1, 2560, 6912)})
+        assert set(plan) == {"qkv", "mlp_up"}
+        assert all(c.kernel in ("tsar_mxu", "tsar_lut") for c in plan.values())

@@ -1,0 +1,144 @@
+"""Fault tolerance: checkpoint/restart, fault injection, straggler detection,
+elastic re-meshing, heartbeats."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro import checkpoint as ckpt
+from repro.data import DataConfig, SyntheticLMStream
+from repro.optim import OptConfig
+from repro.runtime import (Heartbeat, StepMonitor, elastic_remesh_plan,
+                           run_with_restarts)
+from repro.train import init_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get("bitnet-2b-4t").reduced()
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    stream = SyntheticLMStream(DataConfig(cfg.vocab_size, 32, 8, seed=5))
+    return cfg, opt, stream
+
+
+def test_checkpoint_roundtrip_and_gc(setup, tmp_path):
+    cfg, opt, stream = setup
+    state = init_state(cfg, jax.random.PRNGKey(0), opt)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, state, keep=2)
+    assert ckpt.all_steps(str(tmp_path)) == [4, 5]
+    st2 = ckpt.restore(str(tmp_path), 5, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint(setup, tmp_path):
+    cfg, opt, stream = setup
+    state = init_state(cfg, jax.random.PRNGKey(1), opt)
+    h = ckpt.save(str(tmp_path), 7, state, async_save=True)
+    h.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+def test_crash_recovery_bit_exact(setup, tmp_path):
+    """Train 10 steps straight == train 6, 'crash', restore, train 4.
+
+    The data stream is step-indexed so the replay consumes identical batches
+    — the recovered run must be bit-identical to the uninterrupted one.
+    """
+    cfg, opt, stream = setup
+    step = jax.jit(make_train_step(cfg, opt))
+
+    state = init_state(cfg, jax.random.PRNGKey(2), opt)
+    for i in range(10):
+        state, _ = step(state, stream.batch(i))
+    straight = state
+
+    state = init_state(cfg, jax.random.PRNGKey(2), opt)
+    for i in range(6):
+        state, _ = step(state, stream.batch(i))
+    ckpt.save(str(tmp_path), 6, state)
+    del state  # "crash"
+    target = init_state(cfg, jax.random.PRNGKey(99), opt)  # fresh process
+    state = ckpt.restore(str(tmp_path), 6, target)
+    for i in range(6, 10):
+        state, _ = step(state, stream.batch(i))
+
+    for a, b in zip(jax.tree.leaves(straight.params), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_with_restarts_fault_injection(setup, tmp_path):
+    cfg, opt, stream = setup
+    step = jax.jit(make_train_step(cfg, opt))
+    crashes = {"armed": 2}  # fail twice, then succeed
+
+    def restore_fn():
+        latest = ckpt.latest_step(str(tmp_path))
+        target = init_state(cfg, jax.random.PRNGKey(0), opt)
+        if latest is None:
+            return target, 0
+        return ckpt.restore(str(tmp_path), latest, target), latest
+
+    def body(state, start):
+        for i in range(start, 12):
+            if i == 5 and crashes["armed"] > 0:
+                crashes["armed"] -= 1
+                raise RuntimeError("simulated node failure")
+            state, _ = step(state, stream.batch(i))
+            if (i + 1) % 2 == 0:
+                ckpt.save(str(tmp_path), i + 1, state)
+        return 12
+
+    report = run_with_restarts(body, restore_fn=restore_fn, max_restarts=3)
+    assert report.completed and report.restarts == 2
+    assert len(report.failures) == 2
+    assert ckpt.latest_step(str(tmp_path)) == 12
+
+
+def test_elastic_restore_to_different_mesh(setup, tmp_path):
+    """Save replicated, restore sharded onto a 1x1 'mesh' with explicit
+    shardings — exercises the device_put-with-new-sharding path the
+    multi-pod elastic restart uses."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg, opt, stream = setup
+    state = init_state(cfg, jax.random.PRNGKey(3), opt)
+    ckpt.save(str(tmp_path), 1, state.params)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = jax.tree.map(
+        lambda x: NamedSharding(mesh, P(*([None] * x.ndim))), state.params)
+    restored = ckpt.restore(str(tmp_path), 1, state.params, shardings=shardings)
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_detection():
+    mon = StepMonitor(window=16, straggler_factor=2.0)
+    for i in range(10):
+        mon.start(i)
+        mon.times.append(0.1)  # synthetic fast steps
+    mon.start(99)
+    assert mon.is_straggler(0.5)
+    assert not mon.is_straggler(0.15)
+
+
+def test_heartbeat(tmp_path):
+    path = os.path.join(str(tmp_path), "hb.json")
+    hb = Heartbeat(path, interval_s=0.0)
+    hb.beat(step=3)
+    assert Heartbeat.is_alive(path, deadline_s=60)
+    assert not Heartbeat.is_alive(path + ".missing")
+
+
+def test_elastic_remesh_plan():
+    assert elastic_remesh_plan(512, 16) == (32, 16)
+    assert elastic_remesh_plan(496, 16) == (31, 16)  # lost a host: fewer DP
+    assert elastic_remesh_plan(16, 16) == (1, 16)
+    with pytest.raises(ValueError):
+        elastic_remesh_plan(8, 16)
