@@ -1,7 +1,8 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  bench_e2e      — Fig. 8  end-to-end prefill/decode, T-SAR vs baselines
+  bench_e2e      — Fig. 8  end-to-end prefill/decode, T-SAR vs baselines,
+                   + serving TTFT/TPOT (chunked-prefill engine, mixed prompts)
   bench_memory   — Fig. 9  memory-request volume model (validated vs dry-run)
   bench_scaling  — Fig. 10 kernel microbench (paper shapes) + chip scaling
   bench_energy   — Table III decode throughput + energy/token
@@ -19,7 +20,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer reps/sizes")
     ap.add_argument("--only", default=None,
-                    choices=[None, "e2e", "memory", "scaling", "energy", "kernels"])
+                    choices=[None, "e2e", "memory", "scaling", "energy", "kernels",
+                             "serving"])
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -35,6 +37,7 @@ def main() -> None:
         "scaling": lambda: bench_scaling.run(quick=args.quick),
         "energy": lambda: bench_energy.run(quick=args.quick),
         "kernels": lambda: bench_kernels.run(quick=args.quick),
+        "serving": lambda: bench_e2e.run_serving(quick=args.quick),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -1,6 +1,13 @@
 """End-to-end serving driver (the paper's inference scenario): batched
-requests against a ternary LM with packed 2-bit weights, continuous batching,
-prefill/decode phase stats — the paper's Sec. IV protocol at example scale.
+requests against a ternary LM with packed 2-bit weights, chunked-prefill
+continuous batching over a block-paged KV cache — the paper's Sec. IV
+protocol at example scale.
+
+Prints per-request latency stats alongside throughput:
+  * TTFT — time to first token (admission + prefill latency),
+  * TPOT — mean time per output token after the first (decode cadence),
+plus the engine's step-budget telemetry showing that no step ran more than
+``prefill_chunk + slots`` real tokens (no whole-prompt stall).
 
     PYTHONPATH=src python examples/serve_ternary.py [--arch gemma2-2b] [--requests 8]
 """
@@ -22,6 +29,9 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--policy", choices=["chunked", "whole"], default=None,
+                    help="default: chunked where the family supports it")
     ap.add_argument("--no-packed", action="store_true")
     args = ap.parse_args()
 
@@ -43,10 +53,16 @@ def main():
         print(f"  {name:22s} -> {choice.kernel:9s} {choice.dataflow}  "
               f"bound={choice.bound}")
 
-    engine = ServingEngine(cfg, params, max_len=128, batch_slots=args.slots,
-                           packed=not args.no_packed)
+    # Mixed prompt lengths: short chats next to prompts spanning many chunks.
     rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=6 + i % 5),
+    lens = [6 + i % 5 if i % 3 else 3 * args.prefill_chunk + i for i in range(args.requests)]
+    # max_len tracks the workload so large --prefill-chunk values don't push
+    # the long prompts past the admission limit (finished-ignored).
+    max_len = max(128, max(lens, default=0) + args.max_new + 1)
+    engine = ServingEngine(cfg, params, max_len=max_len, batch_slots=args.slots,
+                           packed=not args.no_packed,
+                           prefill_chunk=args.prefill_chunk, policy=args.policy)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=lens[i]),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
@@ -54,10 +70,19 @@ def main():
     wall = time.perf_counter() - t0
 
     total_new = sum(len(r.out_tokens) for r in reqs)
-    print(f"\n{args.requests} requests, {total_new} tokens in {wall:.2f}s")
+    lat = engine.latency_stats(reqs)
+    span = f"prompts {min(lens)}..{max(lens)} tok, " if lens else ""
+    print(f"\n{args.requests} requests ({span}policy={engine.policy}), "
+          f"{total_new} tokens in {wall:.2f}s")
     print(f"prefill time {engine.stats['prefill_s']:.2f}s | "
           f"decode time {engine.stats['decode_s']:.2f}s | "
           f"steady-state decode {engine.throughput():.1f} tok/s")
+    print(f"TTFT mean {lat['ttft_mean_s'] * 1e3:.0f}ms max {lat['ttft_max_s'] * 1e3:.0f}ms | "
+          f"TPOT mean {lat['tpot_mean_s'] * 1e3:.0f}ms")
+    print(f"max step load {engine.max_step_tokens()} real tokens "
+          f"(budget {args.prefill_chunk} + {args.slots} slots) | "
+          f"whole prefills {engine.stats['whole_prefills']} | "
+          f"peak KV blocks {engine.stats['peak_kv_blocks']}/{engine.kv.num_blocks - 1}")
 
 
 if __name__ == "__main__":

@@ -43,6 +43,15 @@ from repro.train import TrainState, init_state, make_train_step, sharding
 BIG_PARAMS = 60e9  # above this, bf16 adam moments (fits 400B on one pod)
 
 
+def cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions: newer jax
+    returns one flat dict, older returns a per-device list of dicts."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _named(mesh, specs):
     return sharding.to_named(mesh, specs)
 
@@ -134,7 +143,7 @@ def run_cell(cfg, shape, mesh, mesh_name: str, weights: str = "packed",
         lowered, meta = lower_cell(cfg, shape, mesh, weights=weights, **kw)
         rec.update(meta)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled)
         try:
             mem = compiled.memory_analysis()
         except Exception:

@@ -43,10 +43,13 @@ def main():
     engine.run(reqs)
     for r in reqs[:4]:
         print(f"req {r.uid}: {r.out_tokens}")
+    lat = engine.latency_stats(reqs)
     print(f"prefill {engine.stats['prefill_s']:.2f}s | "
           f"decode {engine.stats['decode_s']:.2f}s | "
           f"{engine.throughput():.1f} tok/s steady-state "
           f"({'packed 2-bit' if not args.no_packed else 'latent fp'})")
+    print(f"TTFT mean {lat['ttft_mean_s'] * 1e3:.0f}ms | "
+          f"TPOT mean {lat['tpot_mean_s'] * 1e3:.2f}ms | policy={engine.policy}")
 
 
 if __name__ == "__main__":

@@ -191,3 +191,19 @@ def decode_step(cfg, params, tokens, cache: dict, t, train: bool = False):
 
     x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
     return _head(cfg, params, x), new_cache
+
+
+def chunk_step(cfg, params, tokens, pos, cache: dict, lengths, train: bool = False):
+    """Per-slot decode step for the paged serving engine: tokens (B, C),
+    pos (B, C) absolute positions, lengths (B,) per-slot KV write offsets.
+    Cross-attention K/V were cached at prefill and are reused unchanged."""
+    x = (params["embed"][tokens] * math.sqrt(cfg.d_model)).astype(jnp.float32)
+
+    def body(x, xs):
+        p, cache_l = xs
+        x, nc = _dec_block(cfg, p, x, None, pos=pos, train=train,
+                           mode="decode", cache=cache_l, cache_len=lengths)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    return _head(cfg, params, x), new_cache

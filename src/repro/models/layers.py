@@ -189,8 +189,9 @@ def attention(
     v = constrain(v, "attn_kv")
 
     new_cache = None
-    if cache is not None:
-        # Decode: write new K/V at position cache_len, attend over the prefix.
+    if cache is not None and jnp.ndim(cache_len) == 0:
+        # Legacy synchronous decode: write new K/V at position cache_len
+        # (shared by the whole batch), attend over the prefix.
         start = cache_len
         ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
                                           (0, start, 0, 0))
@@ -205,6 +206,27 @@ def attention(
             in_win = kpos > (cache_len - cfg.window_size)
             valid = valid & (jnp.asarray(is_global, bool) | in_win)
         mask = valid[None, None, None, None, :]             # (1,1,1,S=1,T)
+    elif cache is not None:
+        # Chunked-append decode (paged serving engine): ``cache_len`` is a
+        # (B,) vector of per-slot write offsets and ``pos`` carries per-slot
+        # absolute query positions (B, S).  Each slot's S new K/V rows are
+        # written contiguously at its own offset; the mask is causal in
+        # absolute position, so cache rows beyond a slot's live length
+        # (scratch garbage / this chunk's padding tail) are never attended.
+        upd = jax.vmap(
+            lambda c, u, s0: jax.lax.dynamic_update_slice(c, u, (s0, 0, 0)))
+        ck = upd(cache["k"], k.astype(cache["k"].dtype), cache_len)
+        cv = upd(cache["v"], v.astype(cache["v"].dtype), cache_len)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        t = k.shape[1]
+        kpos = jnp.arange(t)
+        qabs = pos if pos.ndim == 2 else jnp.broadcast_to(pos[None, :], (b, s))
+        valid = kpos[None, None, :] <= qabs[:, :, None]     # (B, S, T)
+        if cfg.window_pattern:
+            in_win = kpos[None, None, :] > (qabs[:, :, None] - cfg.window_size)
+            valid = valid & (jnp.asarray(is_global, bool) | in_win)
+        mask = valid[:, None, None, :, :]                   # (B,1,1,S,T)
     else:
         t = k.shape[1]
         if causal and kv_x is None:
@@ -242,10 +264,12 @@ def attention(
     # Long sequences: scan over query blocks so the (Sq, T) score tile is
     # bounded (flash-attention-style working set; exact math since each query
     # block sees its full key row).  Peak scores memory: B*H*Q_CHUNK*T.
+    # The mask's leading dim is 1 (shared causal mask) or B (per-slot chunked
+    # decode mask); both chunk along the query axis the same way.
     if s > Q_CHUNK and s % Q_CHUNK == 0 and mask is not None:
         nq = s // Q_CHUNK
         qb = qg.reshape(b, nq, Q_CHUNK, hk, g, dh)
-        mb = mask.reshape(1, 1, 1, nq, Q_CHUNK, t) if mask is not None else None
+        mb = mask.reshape(mask.shape[0], 1, 1, nq, Q_CHUNK, t)
 
         # Per-chunk remat: without it the scan saves every chunk's (QC, T)
         # score tile for backward, reconstituting the full S x T matrix.
@@ -254,9 +278,9 @@ def attention(
             qc, mc = inp
             return None, attend(qc, mc)
 
-        # mask chunk (1,1,1,Q_CHUNK,T): moveaxis the nq dim to scan over.
+        # mask chunk (B|1,1,1,Q_CHUNK,T): moveaxis the nq dim to scan over.
         qb_s = jnp.moveaxis(qb, 1, 0)                    # (nq, B, QC, Hk, G, Dh)
-        mb_s = jnp.moveaxis(mb, 3, 0)                    # (nq, 1, 1, 1, QC, T)
+        mb_s = jnp.moveaxis(mb, 3, 0)                    # (nq, B|1, 1, 1, QC, T)
         _, ctxs = jax.lax.scan(body, None, (qb_s, mb_s))
         ctx = jnp.moveaxis(ctxs, 0, 1).reshape(b, s, hk, g, dh)
     else:

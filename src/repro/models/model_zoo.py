@@ -42,6 +42,79 @@ def decode_step(cfg, params, tokens, cache, t, train=False):
     return _mod(cfg).decode_step(cfg, params, tokens, cache, t, train)
 
 
+def chunk_step(cfg, params, tokens, pos, cache, lengths, train=False):
+    """Per-slot chunked-append step (paged serving engine): tokens/pos (B, C),
+    lengths (B,) per-slot write offsets.  See transformer.chunk_step."""
+    return _mod(cfg).chunk_step(cfg, params, tokens, pos, cache, lengths, train)
+
+
+# ---------------------------------------------------------------------------
+# Block-paged KV cache plumbing (serving engine)
+#
+# The attention K/V leaves ("k"/"v") are stored as a pool of fixed-size token
+# blocks, (L, num_blocks, block_size, Hkv, Dh); per-slot block tables map a
+# slot's logical token positions onto pool blocks.  Everything else (SSM
+# conv/state, enc-dec cross K/V) is O(1)-per-slot state and stays dense with a
+# leading slot axis.  Block 0 is a reserved scratch block: table padding
+# points at it, so gather/scatter of unallocated table entries read/write
+# garbage that the causal mask guarantees is never attended.
+# ---------------------------------------------------------------------------
+
+PAGED_LEAVES = ("k", "v")
+
+
+def init_paged_cache(cfg, slots: int, num_blocks: int, block_size: int,
+                     dtype=jnp.float32) -> dict:
+    """Pool-shaped decode caches: paged K/V pools + dense per-slot state."""
+    proto = jax.eval_shape(lambda: init_cache(cfg, slots, block_size, dtype))
+    pools = {}
+    for name, leaf in proto.items():
+        if name in PAGED_LEAVES:
+            l, _, bs = leaf.shape[:3]
+            pools[name] = jnp.zeros((l, num_blocks, bs) + leaf.shape[3:], dtype)
+        else:
+            pools[name] = jnp.zeros(leaf.shape, leaf.dtype)
+    return pools
+
+
+def gather_cache_view(pools: dict, block_table) -> dict:
+    """Materialize a contiguous per-slot cache view through block tables.
+
+    block_table (B, VB) int32 — each slot's first VB blocks (0-padded).
+    Paged leaves (L, NB, bs, ...) -> (L, B, VB*bs, ...); dense leaves pass
+    through.  The result is shaped exactly like ``init_cache(cfg, B, VB*bs)``
+    so the model's prefill/decode/chunk entry points run on it unchanged.
+    """
+    view = {}
+    for name, leaf in pools.items():
+        if name in PAGED_LEAVES:
+            l, _, bs = leaf.shape[:3]
+            b, vb = block_table.shape
+            g = leaf[:, block_table]                      # (L, B, VB, bs, ...)
+            view[name] = g.reshape((l, b, vb * bs) + leaf.shape[3:])
+        else:
+            view[name] = leaf
+    return view
+
+
+def scatter_cache_view(pools: dict, block_table, view: dict) -> dict:
+    """Write an updated contiguous view back into the block pools.
+
+    Table entries may repeat block 0 (scratch); duplicate scatters there are
+    benign because scratch contents are never read as live data.
+    """
+    out = {}
+    for name, leaf in pools.items():
+        if name in PAGED_LEAVES:
+            l, _, bs = leaf.shape[:3]
+            b, vb = block_table.shape
+            blk = view[name].reshape((l, b, vb, bs) + leaf.shape[3:])
+            out[name] = leaf.at[:, block_table].set(blk)
+        else:
+            out[name] = view[name]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Input specs (ShapeDtypeStruct stand-ins, dry-run contract)
 # ---------------------------------------------------------------------------

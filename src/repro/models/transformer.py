@@ -277,3 +277,33 @@ def decode_step(cfg, params, tokens, cache: dict, t, train: bool = False):
 
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], flags, cache))
     return _head(cfg, params, x), new_cache
+
+
+def chunk_step(cfg, params, tokens, pos, cache: dict, lengths, train: bool = False):
+    """Chunked-append step for the paged serving engine.
+
+    tokens (B, C) int32 — per-slot token rows: a prefill chunk, a single
+    decode token, or padding (slots advance independently);
+    pos (B, C) int32 — absolute positions of each token (padding clamped);
+    lengths (B,) int32 — per-slot KV write offsets (current live length).
+
+    Returns (logits (B, C, V), updated caches).  C == 1 reduces to a decode
+    step with per-slot positions; C > 1 interleaves up to C prompt tokens of
+    a prefilling slot with the other slots' single decode tokens.  SSM/hybrid
+    recurrences only support C == 1 (their prefill goes through ``prefill``).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        assert tokens.shape[1] == 1, "SSM recurrence: chunked path is C == 1 only"
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    x = x.astype(jnp.float32)
+    flags = global_flags(cfg)
+
+    def body(carry, xs):
+        xv = carry
+        p, flag, cache_l = xs
+        xv, _, nc = _block(cfg, p, xv, flag=flag, pos=pos, train=train,
+                           mode="decode", cache=cache_l, cache_len=lengths)
+        return xv, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], flags, cache))
+    return _head(cfg, params, x), new_cache

@@ -1,1 +1,8 @@
-from repro.serving.engine import Request, ServingEngine, freeze_params  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    Request,
+    ServingEngine,
+    freeze_params,
+    packed_fraction,
+)
+from repro.serving.kv_cache import PagedKVCache  # noqa: F401
+from repro.serving.scheduler import ChunkedScheduler, SlotState, StepPlan  # noqa: F401

@@ -1,21 +1,37 @@
-"""Batched serving engine: prefill + steady-state decode with slot-based
-continuous batching.
+"""Serving engine: chunked-prefill continuous batching over a block-paged KV
+cache.
 
-The engine mirrors the paper's inference protocol (Sec. IV-A): prefill builds
-the KV cache (GEMM-heavy), decode measures steady-state throughput (GEMV-
-heavy).  Requests are assigned to fixed batch slots; finished slots are
-refilled from the queue without stopping the decode loop (continuous
-batching 'lite' — slot-synchronous, which is what static-shape SPMD wants).
+The engine mirrors the paper's inference protocol (Sec. IV-A) — a GEMM-heavy
+prefill filling the KV cache and a GEMV-heavy steady-state decode — but
+serves them Sarathi-style: instead of blocking the decode loop on whole-
+prompt prefills, every engine step is ONE jitted static-shape model call that
+mixes up to ``prefill_chunk`` prompt tokens from the admitted request with
+one decode token per running request (see ``scheduler.ChunkedScheduler``).
+KV memory is a pool of fixed-size blocks reached through per-slot block
+tables (``kv_cache.PagedKVCache``), so resident cache bytes track live
+tokens, not ``slots * max_len``.
+
+The module splits three ways:
+
+* ``kv_cache.py``  — block pool, free-list allocator, per-slot block tables;
+* ``scheduler.py`` — admission + chunked-prefill step planning + preemption;
+* this file        — the ``ServingEngine``/``Request`` API, the jitted
+  gather -> model -> scatter step, sampling, and latency stats (per-request
+  TTFT/TPOT).
+
+Policies: ``chunked`` (default for dense/MoE attention families) interleaves
+prefill chunks with decode; ``whole`` prefills each admitted prompt in a
+single per-slot call (required for SSM/hybrid recurrences, enc-dec and VLM
+frontends, and useful as the equivalence reference in tests).  Both run the
+same per-slot-position decode math, so their greedy outputs are identical.
 
 Weight modes:
 * ``qat``    — latent fp weights, exact-int8 eval math.
 * ``packed`` — weights frozen to 2-bit T-SAR planes; every BitLinear matmul
-  streams 8x fewer weight bytes (the paper's core claim, visible in the
-  dry-run roofline memory term).
+  streams 8x fewer weight bytes (the paper's core claim).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass, field
 
@@ -24,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers, model_zoo
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.scheduler import ChunkedScheduler, Preempt, SlotState
 
 
 @dataclass
@@ -34,6 +52,24 @@ class Request:
     temperature: float = 0.0
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    # -- latency stats (stamped by the engine) --
+    t_submit: float | None = None
+    t_first: float | None = None
+    t_done: float | None = None
+
+    @property
+    def ttft(self) -> float | None:
+        """Time to first token (s)."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot(self) -> float | None:
+        """Mean time per output token after the first (s/token)."""
+        if self.t_first is None or self.t_done is None or len(self.out_tokens) < 2:
+            return None
+        return (self.t_done - self.t_first) / (len(self.out_tokens) - 1)
 
 
 def freeze_params(params) -> dict:
@@ -75,103 +111,243 @@ def packed_fraction(params) -> float:
     return packed / max(total, 1)
 
 
+# ---------------------------------------------------------------------------
+# Jitted step bodies (gather -> model -> scatter, fused in one XLA program)
+# ---------------------------------------------------------------------------
+
+def _chunk_call(cfg, params, pools, table, tokens, pos, lengths, emit_idx):
+    view = model_zoo.gather_cache_view(pools, table)
+    logits, view = model_zoo.chunk_step(cfg, params, tokens, pos, view,
+                                        lengths, train=False)
+    pools = model_zoo.scatter_cache_view(pools, table, view)
+    sel = jnp.take_along_axis(logits, emit_idx[:, None, None], axis=1)[:, 0]
+    return sel, pools
+
+
+def _whole_prefill_call(cfg, params, pools, table, batch, slot):
+    view = model_zoo.gather_cache_view(pools, table)
+    slot_view = jax.tree.map(
+        lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, 1), view)
+    logits, slot_view = model_zoo.prefill(cfg, params, batch, slot_view,
+                                          train=False)
+    view = jax.tree.map(
+        lambda full, sl: jax.lax.dynamic_update_index_in_dim(full, sl[:, 0], slot, 1),
+        view, slot_view)
+    pools = model_zoo.scatter_cache_view(pools, table, view)
+    return logits[:, -1, :], pools
+
+
+_CHUNKABLE_FAMILIES = ("dense", "moe")
+
+
 class ServingEngine:
     def __init__(self, cfg, params, *, max_len: int = 512, batch_slots: int = 4,
-                 packed: bool = False, cache_dtype=jnp.float32, seed: int = 0):
+                 packed: bool = False, cache_dtype=jnp.float32, seed: int = 0,
+                 prefill_chunk: int = 16, block_size: int = 16,
+                 kv_blocks: int | None = None, policy: str | None = None):
         self.cfg = cfg
         self.params = freeze_params(params) if packed else params
         self.max_len = max_len
         self.slots = batch_slots
         self.key = jax.random.PRNGKey(seed)
-        self._queue: list[Request] = []
-        self._active: list[Request | None] = [None] * batch_slots
-        self._cache = model_zoo.init_cache(cfg, batch_slots, max_len, cache_dtype)
-        self._lengths = np.zeros(batch_slots, np.int32)
-        self._last_tok = np.zeros((batch_slots, 1), np.int32)
-        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "decode_tokens": 0}
+        self.prefill_chunk = prefill_chunk
+        if policy is None:
+            policy = "chunked" if cfg.family in _CHUNKABLE_FAMILIES else "whole"
+        elif policy == "chunked" and cfg.family not in _CHUNKABLE_FAMILIES:
+            # SSM recurrences / frontend prefills need the whole-prompt path;
+            # refusing (rather than silently downgrading) keeps benchmark
+            # labels honest.
+            raise ValueError(
+                f"policy='chunked' is unsupported for family {cfg.family!r}; "
+                "pass policy=None (auto) or 'whole'")
+        self.policy = policy
+        self._extra = cfg.frontend_seq if cfg.family == "vlm" else 0
 
-        self._prefill = jax.jit(
-            lambda p, b, c: model_zoo.prefill(cfg, p, b, c, train=False))
-        self._decode = jax.jit(
-            lambda p, t, c, n: model_zoo.decode_step(cfg, p, t, c, n, train=False))
+        self.kv = PagedKVCache(cfg, batch_slots, max_len, block_size=block_size,
+                               num_blocks=kv_blocks, dtype=cache_dtype)
+        self.sched = ChunkedScheduler(prefill_chunk=prefill_chunk)
+        self._queue: list[Request] = []
+        self._slots: list[SlotState | None] = [None] * batch_slots
+        self.stats = {
+            "prefill_s": 0.0, "decode_s": 0.0,
+            "decode_tokens": 0, "total_tokens": 0, "prefill_tokens": 0,
+            "steps": 0, "whole_prefills": 0, "preemptions": 0,
+            "peak_kv_blocks": 0, "max_step_tokens": 0,
+        }
+
+        # Donating the pools lets XLA update the block pools in place instead
+        # of holding input + output copies alive across the step (on backends
+        # without aliasing support jax falls back to a copy with a warning).
+        self._chunk_fn = jax.jit(
+            lambda p, pools, tbl, tk, ps, ln, ei:
+            _chunk_call(cfg, p, pools, tbl, tk, ps, ln, ei),
+            donate_argnums=(1,))
+        self._prefill_fn = jax.jit(
+            lambda p, pools, tbl, b, i:
+            _whole_prefill_call(cfg, p, pools, tbl, b, i),
+            donate_argnums=(1,))
 
     # -- request management --------------------------------------------------
 
     def submit(self, req: Request):
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
         self._queue.append(req)
 
     def _admit(self):
-        """Fill empty slots; prefill each new request individually (per-slot
-        cache splice keeps the decode batch static)."""
-        for i in range(self.slots):
-            if self._active[i] is None and self._queue:
-                req = self._queue.pop(0)
-                self._active[i] = req
-                self._prefill_slot(i, req)
+        admitted = self.sched.admit(self._slots, self._queue, self.kv,
+                                    extra_positions=self._extra,
+                                    reserve_full=self.policy == "whole")
+        for i, st in admitted:
+            if self.policy == "whole":
+                self._prefill_slot(i, st)
+            # chunked: the scheduler interleaves this prompt's chunks with
+            # running decodes from the next step() on.
 
-    def _prefill_slot(self, i: int, req: Request):
+    def _prefill_slot(self, i: int, st: SlotState):
+        """Whole-prompt prefill of one slot through the paged cache."""
         cfg = self.cfg
-        s = len(req.prompt)
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        batch = {"tokens": jnp.asarray(st.prompt, jnp.int32)[None, :]}
         if cfg.family == "vlm":
-            batch["patches"] = jnp.zeros((1, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
+            batch["patches"] = jnp.zeros(
+                (1, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
         if cfg.family == "encdec":
             batch["frames"] = jnp.zeros((1, cfg.enc_seq, cfg.d_model), jnp.float32)
-        slot_cache = jax.tree.map(lambda c: c[:, i:i + 1], self._cache)
+        table = self.kv.table_view(self.kv.max_blocks)
         t0 = time.perf_counter()
-        logits, slot_cache = self._prefill(self.params, batch, slot_cache)
-        logits.block_until_ready()
-        self.stats["prefill_s"] += time.perf_counter() - t0
-        self._cache = jax.tree.map(
-            lambda full, sl: jax.lax.dynamic_update_index_in_dim(full, sl[:, 0], i, 1),
-            self._cache, slot_cache)
-        tok = self._sample(logits[:, -1, :], req.temperature)
-        extra = cfg.frontend_seq if cfg.family == "vlm" else 0
-        self._lengths[i] = s + extra
-        self._last_tok[i, 0] = int(tok[0])
-        req.out_tokens.append(int(tok[0]))
+        sel, self.kv.pools = self._prefill_fn(
+            self.params, self.kv.pools, table, batch, jnp.int32(i))
+        sel.block_until_ready()
+        dt = time.perf_counter() - t0
+        self.stats["prefill_s"] += dt
+        self.stats["whole_prefills"] += 1
+        self.stats["max_step_tokens"] = max(self.stats["max_step_tokens"],
+                                            len(st.prompt) + st.extra)
+        self.kv.lengths[i] = len(st.prompt) + st.extra
+        st.cursor = len(st.prompt)
+        tok = int(self._sample(sel, np.array([st.req.temperature]))[0])
+        self._emit_token(i, st, tok)
 
-    def _sample(self, logits, temperature):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
+    # -- sampling -------------------------------------------------------------
+
+    def _sample(self, logits, temps: np.ndarray) -> np.ndarray:
+        """Per-slot sampling: greedy rows stay deterministic argmax, rows with
+        ``temperature > 0`` draw from the tempered categorical (this fixes the
+        seed engine's decode path, which ignored request temperatures)."""
+        greedy = jnp.argmax(logits, axis=-1)
+        if not (temps > 0).any():
+            return np.asarray(greedy)
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        t = jnp.asarray(np.where(temps > 0, temps, 1.0), jnp.float32)
+        samp = jax.random.categorical(sub, logits / t[:, None], axis=-1)
+        return np.asarray(jnp.where(jnp.asarray(temps > 0), samp, greedy))
+
+    def _emit_token(self, i: int, st: SlotState, tok: int):
+        req = st.req
+        req.out_tokens.append(tok)
+        if req.t_first is None:
+            req.t_first = time.perf_counter()
+        self.stats["total_tokens"] += 1
+        if (len(req.out_tokens) >= req.max_new_tokens
+                or self.kv.lengths[i] >= self.max_len - 1):
+            req.done = True
+            req.t_done = time.perf_counter()
+            self.kv.free_slot(i)
+            self._slots[i] = None
+        else:
+            st.last_tok = tok
 
     # -- main loop ------------------------------------------------------------
 
-    def step(self):
-        """One synchronous decode step across all active slots."""
-        if not any(self._active):
-            return
-        # Static-shape decode at the max active length; per-slot masks are
-        # implicit because finished/inactive slots are ignored on readback.
-        t = int(self._lengths.max())
+    def step(self) -> bool:
+        """One engine step: admit, then one mixed prefill-chunk/decode call.
+        Returns False when there was nothing to do."""
+        self._admit()
+        plan = self.sched.plan(self._slots, self.kv)
+        while isinstance(plan, Preempt):
+            self._preempt(plan.slot)
+            plan = self.sched.plan(self._slots, self.kv)
+        if plan is None:
+            return False
+
+        table = self.kv.table_view(plan.view_blocks)
         t0 = time.perf_counter()
-        logits, self._cache = self._decode(
-            self.params, jnp.asarray(self._last_tok), self._cache, jnp.int32(t))
-        logits.block_until_ready()
-        self.stats["decode_s"] += time.perf_counter() - t0
-        toks = np.asarray(self._sample(logits[:, 0, :], 0.0))
-        for i, req in enumerate(self._active):
-            if req is None:
+        sel, self.kv.pools = self._chunk_fn(
+            self.params, self.kv.pools, table,
+            jnp.asarray(plan.tokens), jnp.asarray(plan.pos),
+            jnp.asarray(plan.lengths), jnp.asarray(plan.emit_idx))
+        sel.block_until_ready()
+        dt = time.perf_counter() - t0
+
+        self.stats["steps"] += 1
+        self.stats["max_step_tokens"] = max(self.stats["max_step_tokens"],
+                                            plan.real_tokens)
+        self.stats["peak_kv_blocks"] = max(self.stats["peak_kv_blocks"],
+                                           self.kv.blocks_in_use)
+        self.stats["prefill_tokens"] += plan.prefill_tokens
+        if plan.prefill_tokens > 0:
+            self.stats["prefill_s"] += dt
+        else:
+            self.stats["decode_s"] += dt
+            self.stats["decode_tokens"] += plan.decode_tokens
+
+        toks = None
+        if plan.emit.any():
+            temps = np.array([
+                self._slots[i].req.temperature if plan.emit[i] else 0.0
+                for i in range(self.slots)], np.float32)
+            toks = self._sample(sel, temps)
+        for i in range(self.slots):
+            st = self._slots[i]
+            if st is None or plan.n_real[i] == 0:
                 continue
-            self._lengths[i] += 1
-            self.stats["decode_tokens"] += 1
-            tok = int(toks[i])
-            req.out_tokens.append(tok)
-            if len(req.out_tokens) >= req.max_new_tokens or self._lengths[i] >= self.max_len - 1:
-                req.done = True
-                self._active[i] = None
-            else:
-                self._last_tok[i, 0] = tok
+            self.kv.lengths[i] += int(plan.n_real[i])
+            if i == plan.prefill_slot:
+                st.cursor += int(plan.n_real[i])
+            if plan.emit[i]:
+                self._emit_token(i, st, int(toks[i]))
+        return True
+
+    def _preempt(self, i: int):
+        """Recompute-style preemption (vLLM): return the youngest request to
+        the queue head; its prompt + generated tokens re-prefill later."""
+        st = self._slots[i]
+        self.kv.free_slot(i)
+        self._slots[i] = None
+        self._queue.insert(0, st.req)
+        self.stats["preemptions"] += 1
 
     def run(self, requests: list[Request]) -> list[Request]:
         for r in requests:
             self.submit(r)
-        while self._queue or any(self._active):
-            self._admit()
-            self.step()
+        while self._queue or any(s is not None for s in self._slots):
+            if not self.step() and self._queue:
+                # Every slot is free yet the head-of-queue request still
+                # failed the admission gate: the pool can never cover it.
+                raise RuntimeError(
+                    f"request uid={self._queue[0].uid} cannot be admitted: "
+                    f"KV pool ({self.kv.num_blocks - 1} blocks of "
+                    f"{self.kv.block_size}) smaller than the admission gate; "
+                    "raise kv_blocks or lower prefill_chunk/max_len")
         return requests
 
+    # -- metrics --------------------------------------------------------------
+
     def throughput(self) -> float:
+        """Steady-state decode tokens/s (pure-decode steps only)."""
         return self.stats["decode_tokens"] / max(self.stats["decode_s"], 1e-9)
+
+    def max_step_tokens(self) -> int:
+        return self.stats["max_step_tokens"]
+
+    def latency_stats(self, requests: list[Request]) -> dict:
+        """Aggregate TTFT/TPOT over finished requests (seconds)."""
+        ttfts = [r.ttft for r in requests if r.ttft is not None]
+        tpots = [r.tpot for r in requests if r.tpot is not None]
+        mean = lambda xs: sum(xs) / len(xs) if xs else float("nan")
+        return {
+            "ttft_mean_s": mean(ttfts),
+            "ttft_max_s": max(ttfts, default=float("nan")),
+            "tpot_mean_s": mean(tpots),
+            "n": len(ttfts),
+        }

@@ -1,0 +1,124 @@
+"""Block-paged KV cache for the serving engine (vLLM-style paged attention,
+adapted to static-shape JAX).
+
+Device memory holds one *pool* of fixed-size token blocks per attention K/V
+leaf, (L, num_blocks, block_size, Hkv, Dh), instead of a dense
+(slots, max_len) cache — so resident KV memory is proportional to live
+tokens, not to ``slots * max_len``.  A host-side free-list allocator hands
+blocks to slots; each slot's logical token positions map onto pool blocks
+through a per-slot block table.
+
+Before each model call the engine gathers the active slots' blocks into a
+contiguous (L, B, V, Hkv, Dh) view (V is a power-of-two bucket of block
+counts, so the jitted step re-traces only O(log max_len) times), runs the
+step, and scatters the view's blocks back.  Gather/scatter live in
+``model_zoo.gather_cache_view`` / ``scatter_cache_view`` and are fused into
+the engine's jitted step.
+
+Block 0 is reserved scratch: unallocated table entries point at it, so the
+static-shape gather/scatter of a short slot's padding reads/writes garbage
+that the causal mask guarantees is never attended.  O(1)-per-slot state (SSM
+conv tail + SSD state, enc-dec cross K/V) is not paged; it stays dense with a
+leading slot axis inside the same cache pytree.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_zoo
+
+
+class PagedKVCache:
+    """Free-list block allocator + block tables over ``model_zoo`` pools."""
+
+    def __init__(self, cfg, slots: int, max_len: int, *, block_size: int = 16,
+                 num_blocks: int | None = None, dtype=jnp.float32):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks = max(1, math.ceil(max_len / block_size))
+        if num_blocks is None:
+            # Safe default: every slot can grow to max_len (+1 scratch block).
+            num_blocks = slots * self.max_blocks + 1
+        if num_blocks < 2:
+            raise ValueError("need at least one scratch + one real block")
+        self.num_blocks = num_blocks
+        self.pools = model_zoo.init_paged_cache(cfg, slots, num_blocks,
+                                                block_size, dtype)
+        # Host-side allocator state.  Block 0 is reserved scratch.
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
+        self.table = np.zeros((slots, self.max_blocks), np.int32)
+        self.n_blocks = np.zeros(slots, np.int32)     # allocated blocks / slot
+        self.lengths = np.zeros(slots, np.int32)      # live tokens / slot
+
+    # -- allocator ----------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return len(self._free) >= self.blocks_for(n_tokens)
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover ``n_tokens`` positions.  Returns
+        False (allocating nothing) if the free list cannot cover the growth."""
+        need = self.blocks_for(n_tokens)
+        if need > self.max_blocks:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens > max_len {self.max_len}")
+        grow = need - int(self.n_blocks[slot])
+        if grow <= 0:
+            return True
+        if grow > len(self._free):
+            return False
+        for j in range(int(self.n_blocks[slot]), need):
+            self.table[slot, j] = self._free.pop()
+        self.n_blocks[slot] = need
+        return True
+
+    def free_slot(self, slot: int) -> None:
+        """Return a finished slot's blocks to the free list.  Block contents
+        are recycled dirty — safe because a new request starts at length 0 and
+        the causal mask never reads past a slot's live length."""
+        for j in range(int(self.n_blocks[slot])):
+            self._free.append(int(self.table[slot, j]))
+        self.table[slot, :] = 0
+        self.n_blocks[slot] = 0
+        self.lengths[slot] = 0
+
+    # -- step views ---------------------------------------------------------
+
+    def view_blocks(self, n_tokens: int) -> int:
+        """Power-of-two bucket of blocks covering ``n_tokens`` positions
+        (bounds jit re-traces of the engine step to O(log max_blocks)).
+
+        May exceed ``max_blocks``: a chunk-wide write starting near max_len
+        must fit inside the view, otherwise ``dynamic_update_slice`` would
+        clamp the start and overwrite live positions.  ``table_view`` pads
+        the extra columns with scratch-block entries."""
+        need = max(1, self.blocks_for(max(1, n_tokens)))
+        vb = 1
+        while vb < need:
+            vb *= 2
+        return vb
+
+    def table_view(self, view_blocks: int) -> jnp.ndarray:
+        if view_blocks <= self.max_blocks:
+            return jnp.asarray(self.table[:, :view_blocks])
+        pad = np.zeros((self.slots, view_blocks - self.max_blocks), np.int32)
+        return jnp.asarray(np.concatenate([self.table, pad], axis=1))
+
+    def live_tokens(self) -> int:
+        return int(self.lengths.sum())

@@ -1,0 +1,181 @@
+"""Admission + chunked-prefill step planning (Sarathi-style stall-free
+batching).
+
+Every engine step is ONE static-shape batched model call of width C:
+
+* each *decoding* slot contributes its single last-sampled token,
+* at most ONE *prefilling* slot advances by up to ``prefill_chunk`` prompt
+  tokens (round-robin by admission order),
+* empty slots ride along as padding (their writes land in the scratch block
+  and are never attended).
+
+So a long prompt can never stall the decode loop for more than one step, and
+per-step real work is bounded by ``prefill_chunk + slots`` tokens (the
+acceptance bound).  When no slot is prefilling the step width collapses to
+C == 1 — a pure decode step, exactly as cheap as the classic decode loop.
+
+The planner also reserves KV blocks with the :class:`PagedKVCache` allocator;
+if the pool cannot cover this step's growth it returns a :class:`Preempt`
+directive naming a victim (youngest admission first, vLLM's recompute-style
+preemption) instead of a plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class SlotState:
+    """Engine-side per-slot request progress."""
+    req: object                       # serving.engine.Request
+    prompt: np.ndarray                # tokens still to prefill (incl. resume)
+    cursor: int = 0                   # prompt tokens already in the cache
+    last_tok: int = 0                 # feeds the next decode step
+    admitted_at: int = 0              # admission counter (preemption order)
+    extra: int = 0                    # non-token cache positions (VLM patches)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.cursor < len(self.prompt)
+
+
+@dataclass
+class StepPlan:
+    """One static-shape batched step, host-side arrays ready for device."""
+    tokens: np.ndarray                # (B, C) int32
+    pos: np.ndarray                   # (B, C) int32 absolute positions
+    lengths: np.ndarray               # (B,) int32 pre-step write offsets
+    n_real: np.ndarray                # (B,) real (non-padding) tokens per slot
+    emit: np.ndarray                  # (B,) bool — slot samples a token
+    emit_idx: np.ndarray              # (B,) row offset of the emitting logit
+    chunk: int                        # C, static step width
+    view_blocks: int                  # block-table view width for this step
+    prefill_slot: int = -1            # slot advancing its prefill (-1: none)
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+    @property
+    def real_tokens(self) -> int:
+        return int(self.n_real.sum())
+
+
+@dataclass
+class Preempt:
+    """Free ``slot`` (recompute-style) so the step can get KV blocks."""
+    slot: int
+
+
+@dataclass
+class ChunkedScheduler:
+    prefill_chunk: int = 16
+    _admissions: int = field(default=0, init=False)
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self, slots: list, queue: list, kv, extra_positions: int = 0,
+              reserve_full: bool = False) -> list[tuple[int, SlotState]]:
+        """Fill empty slots from the FIFO queue.
+
+        ``reserve_full`` (whole-prefill policy) reserves the full prompt's KV
+        blocks (+1 headroom token) at admission; the chunked policy instead
+        allocates block-by-block as chunks land (``plan`` below), so blocks
+        in use track live tokens, and only a first chunk's worth is gated
+        here.  ``extra_positions`` are non-token cache positions every
+        request carries (VLM patch tokens).  Returns the newly admitted
+        (slot, state) pairs; the engine decides whether each prefills chunked
+        or whole."""
+        admitted = []
+        for i in range(len(slots)):
+            if slots[i] is None:
+                while queue:
+                    req = queue[0]
+                    prompt = np.concatenate(
+                        [np.asarray(req.prompt, np.int32),
+                         np.asarray(req.out_tokens, np.int32)])  # resume after preempt
+                    total = len(prompt) + extra_positions + 1
+                    if total > kv.max_len:
+                        # Finished-ignored (vLLM semantics): can never fit.
+                        # Retry this slot with the next queued request.
+                        queue.pop(0)
+                        req.done = True
+                        continue
+                    gate = (total if reserve_full
+                            else min(total, self.prefill_chunk + 1))
+                    if not kv.can_allocate(gate):
+                        # FIFO: don't let short requests starve long ones.
+                        return admitted
+                    queue.pop(0)
+                    st = SlotState(req=req, prompt=prompt, extra=extra_positions,
+                                   admitted_at=self._admissions)
+                    self._admissions += 1
+                    if reserve_full:
+                        kv.ensure(i, total)
+                    slots[i] = st
+                    admitted.append((i, st))
+                    break
+        return admitted
+
+    # -- step planning -------------------------------------------------------
+
+    def plan(self, slots: list, kv) -> StepPlan | Preempt | None:
+        b = len(slots)
+        active = [i for i in range(b) if slots[i] is not None]
+        if not active:
+            return None
+
+        prefillers = sorted((i for i in active if slots[i].prefilling),
+                            key=lambda i: slots[i].admitted_at)
+        pf = prefillers[0] if prefillers else -1
+        chunk = self.prefill_chunk if pf >= 0 else 1
+
+        tokens = np.zeros((b, chunk), np.int32)
+        pos = np.zeros((b, chunk), np.int32)
+        lengths = np.zeros(b, np.int32)
+        n_real = np.zeros(b, np.int32)
+        emit = np.zeros(b, bool)
+        emit_idx = np.zeros(b, np.int32)
+        n_prefill = n_decode = 0
+
+        for i in active:
+            st = slots[i]
+            ln = int(kv.lengths[i])
+            lengths[i] = ln
+            if i == pf:
+                c = min(chunk, len(st.prompt) - st.cursor)
+                if not kv.ensure(i, ln + c):
+                    return Preempt(self._victim(slots, active))
+                tokens[i, :c] = st.prompt[st.cursor:st.cursor + c]
+                pos[i] = ln + np.minimum(np.arange(chunk), c - 1)
+                n_real[i] = c
+                emit[i] = st.cursor + c == len(st.prompt)  # prompt done: TTFT
+                emit_idx[i] = c - 1
+                n_prefill += c
+            elif st.prefilling:
+                # Waits its turn; padding row (writes land past its live
+                # length / in scratch, never attended).
+                pos[i] = max(ln - 1, 0)
+            else:
+                if not kv.ensure(i, ln + 1):
+                    return Preempt(self._victim(slots, active))
+                tokens[i, 0] = st.last_tok
+                pos[i] = ln
+                n_real[i] = 1
+                emit[i] = True
+                n_decode += 1
+
+        needed = int(max(kv.lengths[i] for i in active)) + chunk
+        return StepPlan(tokens=tokens, pos=pos, lengths=lengths, n_real=n_real,
+                        emit=emit, emit_idx=emit_idx, chunk=chunk,
+                        view_blocks=kv.view_blocks(needed),
+                        prefill_slot=pf, prefill_tokens=n_prefill,
+                        decode_tokens=n_decode)
+
+    @staticmethod
+    def _victim(slots: list, active: list[int]) -> int:
+        if len(active) <= 1:
+            raise RuntimeError(
+                "KV block pool too small for a single request; "
+                "raise num_blocks / lower max_len")
+        return max(active, key=lambda i: slots[i].admitted_at)

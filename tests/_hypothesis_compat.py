@@ -1,0 +1,78 @@
+"""Drop-in fallback for the tiny subset of `hypothesis` this suite uses.
+
+When the real package is importable it is re-exported unchanged (install it
+via ``requirements-dev.txt`` to get shrinking and adversarial search).  When
+it is missing — as on the minimal CI/container image — ``@given`` degrades to
+drawing a fixed number of seeded pseudo-random examples per test, so the
+property tests still collect and run everywhere instead of killing the whole
+session at import time.
+
+Supported subset: ``@settings(max_examples=..., deadline=...)``, ``@given``
+with keyword strategies, and ``st.integers`` / ``st.sampled_from`` /
+``st.booleans`` / ``st.floats``.
+"""
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: D401 - namespace mirroring hypothesis.strategies
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                # Deterministic per-test stream: reruns hit the same examples.
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {name: s.example(rng) for name, s in strats.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # Hide the strategy-filled parameters from pytest, which would
+            # otherwise try to resolve them as fixtures.
+            params = [p for p in inspect.signature(fn).parameters.values()
+                      if p.name not in strats]
+            wrapper.__signature__ = inspect.Signature(params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

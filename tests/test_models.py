@@ -120,3 +120,28 @@ def test_remat_matches_no_remat():
     g2 = jax.grad(lambda p: zoo.loss_fn(cfg, p, batch, remat=True)[0])(params)
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_qchunk_scan_matches_direct_for_batched_chunk_mask(monkeypatch):
+    """The bounded-memory query-block scan must handle the per-slot chunked
+    decode mask (leading batch dim) identically to the direct path."""
+    from repro.models import layers
+
+    cfg = configs.get("bitnet-2b-4t").reduced()
+    key = jax.random.PRNGKey(0)
+    p = layers.init_attention(key, cfg)
+    b, s, t = 2, 8, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+    cache = {
+        "k": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim)),
+        "v": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim)),
+    }
+    pos = jnp.stack([jnp.arange(s), jnp.arange(s) + 2])   # per-slot offsets
+    lengths = jnp.asarray([0, 2], jnp.int32)
+    direct, _ = layers.attention(cfg, p, x, pos=pos, is_global=True,
+                                 cache=cache, cache_len=lengths, train=False)
+    monkeypatch.setattr(layers, "Q_CHUNK", 4)             # force the scan path
+    scanned, _ = layers.attention(cfg, p, x, pos=pos, is_global=True,
+                                  cache=cache, cache_len=lengths, train=False)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(scanned),
+                               rtol=1e-5, atol=1e-5)
