@@ -1,13 +1,24 @@
 """Pallas kernel timings (interpret mode — correctness-path cost only; real
-TPU timings come from the roofline analysis, not this container)."""
+TPU timings come from the roofline analysis, not this container).
+
+Sweeps block-kill probability ``p_zero`` so the sparse-vs-dense crossover is
+visible in the CSV: each row carries the measured weight density, live-block
+density, and the kernel ``select_kernel`` would dispatch at that density.
+The ``tsar_sparse`` interpret-mode time drops with block density (its grid
+runs over live blocks only); the dense kernels' stays flat.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, timeit
-from repro.core import ternary
+from repro.core import dataflow, ternary
 from repro.kernels import ops
+from repro.sparse import format as sparse_format, stats as sparse_stats
+
+P_ZERO_SWEEP = (0.1, 1.0 / 3.0, 0.6, 0.9)
+BK = BM = 128   # sparse block tiling for the sweep (small shapes)
 
 
 def run(quick: bool = False):
@@ -15,10 +26,35 @@ def run(quick: bool = False):
     shapes = [(8, 512, 512)] if quick else [(8, 512, 512), (1, 1024, 1024)]
     for (n, k, m) in shapes:
         key = jax.random.PRNGKey(n + k)
-        t = ternary.random_ternary(key, (k, m))
-        scale = jnp.ones((m,))
-        tw = ternary.pack(t.astype(jnp.float32), scale)
         x = jax.random.normal(key, (n, k))
+        scale = jnp.ones((m,))
+        for p_zero in P_ZERO_SWEEP:
+            # Block-structured sparsity: p_zero kills whole (BK, BM) blocks
+            # (unstructured zeros never kill a full block — see
+            # sparse/format.random_block_sparse_ternary).
+            t = sparse_format.random_block_sparse_ternary(
+                key, (k, m), bk=BK, bm=BM, p_zero_block=p_zero)
+            bst = sparse_format.from_ternary(t, scale, bk=BK, bm=BM)
+            density = sparse_stats.weight_density(t)
+            choice = dataflow.select_kernel(
+                n, k, m, density=density, block_density=bst.block_density,
+                block_shape=(BK, BM))
+            derived = (f"interpret_mode=1;p_zero_block={p_zero:.2f};"
+                       f"density={density:.3f};block_density={bst.block_density:.3f};"
+                       f"kernel_choice={choice.kernel}")
+
+            tw = ternary.pack(t.astype(jnp.float32), scale)
+            tt = timeit(lambda x: ops.tsar_matmul(x, tw, interpret=True),
+                        x, reps=2, warmup=1)
+            csv_row(f"pallas_mxu_{n}x{k}x{m}_pz{p_zero:.2f}", tt * 1e6, derived)
+            ts = timeit(lambda x: ops.tsar_sparse_matmul(x, bst, interpret=True),
+                        x, reps=2, warmup=1)
+            csv_row(f"pallas_sparse_{n}x{k}x{m}_pz{p_zero:.2f}", ts * 1e6, derived)
+            rows.append((n, k, m, p_zero, bst.block_density, ts))
+
+        # Dense-path AP/OP + LUT baselines at the BitNet prior (unswept).
+        t = ternary.random_ternary(key, (k, m))
+        tw = ternary.pack(t.astype(jnp.float32), scale)
         for df in ("AP", "OP"):
             tt = timeit(lambda x: ops.tsar_matmul(x, tw, dataflow=df, interpret=True),
                         x, reps=2, warmup=1)
@@ -27,5 +63,4 @@ def run(quick: bool = False):
         tt = timeit(lambda x: ops.tsar_lut_gemv(x, ip, iz, scale, c=4, interpret=True),
                     x, reps=2, warmup=1)
         csv_row(f"pallas_lut_{n}x{k}x{m}", tt * 1e6, "interpret_mode=1")
-        rows.append((n, k, m))
     return rows

@@ -66,6 +66,25 @@ def run(quick: bool = False):
                     f"tl2_MB={t_tl2:.1f};tsar_MB={t_tsar:.1f};reduction={red:.1f}x")
             rows.append({"size": name, "kind": kind, "tl2_mb": t_tl2,
                          "tsar_mb": t_tsar, "reduction": red})
+    # Block-sparse format static footprint vs dense 2-bit planes: pool bytes
+    # scale with live blocks; the index map + occupancy metadata are the
+    # overhead that makes the format a net loss near 100% live blocks.
+    bk = bm = 256
+    for name, d, f, nl in BITNET_LADDER[:1] + BITNET_LADDER[3:4]:
+        dense_b = sum(k * m * 2 / 8 for k, m in _block_shapes(d, f)) * nl
+        for live in (1.0, 0.9, 0.5, 0.1):
+            sparse_b = 0.0
+            for k, m in _block_shapes(d, f):
+                kb, mb = -(-k // bk), -(-m // bm)
+                sparse_b += (live * kb * mb * (bk // 8) * bm * 2   # pools
+                             + kb * mb * 8)                        # map+occupancy
+            sparse_b *= nl
+            csv_row(f"mem_sparse_footprint_{name}_live{live:.1f}", 0.0,
+                    f"dense2bit_MB={dense_b/1e6:.1f};sparse_MB={sparse_b/1e6:.1f};"
+                    f"ratio={sparse_b/dense_b:.2f}")
+            rows.append({"size": name, "kind": f"sparse_footprint_{live:.1f}",
+                         "tl2_mb": dense_b / 1e6, "tsar_mb": sparse_b / 1e6,
+                         "reduction": dense_b / max(sparse_b, 1e-9)})
     gemv = [r["reduction"] for r in rows if r["kind"] == "gemv_decode"]
     gemm = [r["reduction"] for r in rows if r["kind"] == "gemm_prefill"]
     csv_row("mem_reduction_range", 0.0,

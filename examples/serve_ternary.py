@@ -62,6 +62,12 @@ def main():
     engine = ServingEngine(cfg, params, max_len=max_len, batch_slots=args.slots,
                            packed=not args.no_packed,
                            prefill_chunk=args.prefill_chunk, policy=args.policy)
+    if engine.density is not None:
+        print(f"weight density (measured): mean {engine.density['density_mean']:.3f} "
+              f"min {engine.density['density_min']:.3f} | "
+              f"live-block fraction {engine.density['block_density_mean']:.3f} "
+              f"over {engine.density['layers']} BitLinear layers "
+              f"(tsar_sparse break-even ~0.9; see docs/kernels.md)")
     reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=lens[i]),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]

@@ -1,3 +1,4 @@
 """Core T-SAR algorithmic layer: ternary quantization, LUT algorithms,
-BitLinear, and the adaptive AP/OP dataflow selector."""
-from repro.core import bitlinear, dataflow, lut, ternary  # noqa: F401
+BitLinear, shared hardware constants, and the adaptive AP/OP dataflow
+selector (now density-aware — see ``repro.sparse``)."""
+from repro.core import bitlinear, dataflow, hw, lut, ternary  # noqa: F401

@@ -25,6 +25,13 @@ from repro.core.dataflow import select_kernel
 # for the TGEMV_16x16 configuration in the paper's Fig. 6 examples.
 DEFAULT_C = 4
 
+# Only compact a block-sparse sidecar at freeze time when the measured
+# live-block fraction sits below this — just above the ~0.9 analytic
+# break-even (dataflow.sparse_break_even), so borderline layers keep the
+# option while dense checkpoints (unstructured zeros -> every block live)
+# don't duplicate their planes into a pool no dispatch will ever pick.
+SPARSE_SIDE_CAR_THRESHOLD = 0.95
+
 
 # ---------------------------------------------------------------------------
 # Straight-through estimators
@@ -83,19 +90,48 @@ class FrozenBitLinear(NamedTuple):
     idx_pos: jax.Array               # (K//c, M) uint8 LUT encodings
     idx_zero: jax.Array
     c: int
+    # Sparsity sidecar (None when frozen under tracing — compaction is
+    # data-dependent): the block pool + the measured densities that drive
+    # the 'auto' kernel dispatch.
+    sparse: Any = None               # sparse_format.BlockSparseTernary | None
+    density: float | None = None     # measured nonzero-weight fraction
+    block_density: float | None = None  # measured live-block fraction
 
     @property
     def shape(self):
         return self.packed.shape
 
 
-def freeze(params: dict, c: int = DEFAULT_C) -> FrozenBitLinear:
-    """Compile-time weight encoding (paper Fig. 5 'offline' phase)."""
+def freeze(params: dict, c: int = DEFAULT_C,
+           block_shape: tuple | None = None) -> FrozenBitLinear:
+    """Compile-time weight encoding (paper Fig. 5 'offline' phase).
+
+    On concrete weights this measures density / block occupancy and — only
+    when the live-block fraction is below ``SPARSE_SIDE_CAR_THRESHOLD`` —
+    compacts the block-sparse sidecar
+    (``repro.sparse.format.BlockSparseTernary``); under tracing
+    (``jax.eval_shape`` etc.) all of it is skipped — pool compaction is
+    data-dependent.
+    """
     t, scale = ternary.absmean_ternarize(params["w"])
     t8 = t.astype(jnp.int8)
     idx_pos, idx_zero = ternary.pack_indices(t8, c)
+    sparse = None
+    density = block_density = None
+    if not isinstance(t8, jax.core.Tracer):
+        from repro.sparse import format as sparse_format
+        from repro.sparse import stats as sparse_stats
+
+        bk, bm = block_shape or sparse_format.DEFAULT_BLOCK_SHAPE
+        occ = sparse_stats.block_occupancy(t8, bk, bm)
+        density = float(ternary.ternary_density(t8))
+        block_density = float((occ > 0).mean())
+        if block_density < SPARSE_SIDE_CAR_THRESHOLD:
+            sparse = sparse_format.from_ternary(t8, scale, bk=bk, bm=bm,
+                                                occupancy=occ)
     return FrozenBitLinear(
-        packed=ternary.pack(t, scale), idx_pos=idx_pos, idx_zero=idx_zero, c=c
+        packed=ternary.pack(t, scale), idx_pos=idx_pos, idx_zero=idx_zero, c=c,
+        sparse=sparse, density=density, block_density=block_density,
     )
 
 
@@ -120,17 +156,46 @@ def apply_frozen(
 ) -> jax.Array:
     """Inference forward with kernel dispatch.
 
-    kernel: 'auto' | 'tsar_lut' | 'tsar_mxu' | 'memory_lut' | 'dense'
+    kernel: 'auto' | 'tsar_lut' | 'tsar_mxu' | 'tsar_sparse' | 'memory_lut'
+    | 'dense'.  'auto' feeds the layer's *measured* density / block occupancy
+    (stamped by :func:`freeze`) into the cost model, so a checkpoint with
+    structurally dead blocks is served by the zero-skipping kernel without
+    any caller change.
     """
     k, m = frozen.shape
-    n = int(jnp.prod(jnp.asarray(x.shape[:-1]))) if x.ndim > 1 else 1
+    n = 1
+    for d in x.shape[:-1]:   # static shape math — keeps apply_frozen jittable
+        n *= d
     if kernel == "auto":
-        kernel = select_kernel(n=n, k=k, m=m, c=frozen.c).kernel
+        kw = {}
+        if frozen.density is not None:
+            kw["density"] = frozen.density
+        if frozen.block_density is not None and frozen.sparse is not None:
+            kw["block_density"] = frozen.block_density
+            kw["block_shape"] = frozen.sparse.block_shape
+        kernel = select_kernel(n=n, k=k, m=m, c=frozen.c, **kw).kernel
+        if kernel == "tsar_sparse" and frozen.sparse is None:
+            kernel = "tsar_mxu"
 
     x32 = x.astype(jnp.float32)
     w_scale = frozen.packed.scale
 
-    if kernel == "tsar_lut":
+    if kernel == "tsar_sparse":
+        if frozen.sparse is None:
+            raise ValueError("layer was frozen without a block-sparse sidecar")
+        if use_pallas:
+            from repro.kernels import ops
+
+            y = ops.tsar_sparse_matmul(x32, frozen.sparse)
+        else:
+            # Traceable jnp fallback: identical math to the sparse kernel
+            # (the planes decode to the same ternary matrix, and skipped
+            # blocks contribute exact int32 zeros either way).  The zero-skip
+            # advantage itself only materializes in the Pallas kernel.
+            a_q, a_scale = ternary.quantize_activations(x32)
+            t = ternary.unpack(frozen.packed)
+            y = lut.dense_int8_matmul(a_q, a_scale, t, w_scale)
+    elif kernel == "tsar_lut":
         y = lut.tsar_lut_matmul(x32, frozen.idx_pos, frozen.idx_zero, frozen.c, w_scale)
     elif kernel == "tsar_mxu":
         if use_pallas:

@@ -13,23 +13,50 @@ The paper ships two microkernel dataflows and picks per layer at compile time:
 On TPU the same knob is the Pallas grid iteration order + which operand's
 BlockSpec is pinned across the inner grid dimension.  The cost model below is
 an analytic bytes/FLOPs estimate against the v5e roofline constants; it also
-chooses *which* kernel family to run (in-VMEM LUT vs decode-to-MXU), since on
-TPU the MXU path dominates once N is large enough to fill a matmul tile.
+chooses *which* kernel family to run (in-VMEM LUT vs decode-to-MXU vs the
+zero-block-skipping sparse pool), since on TPU the MXU path dominates once N
+is large enough to fill a matmul tile, and the sparse path wins once enough
+whole blocks are dead.
+
+Density is an explicit input: the seed model implicitly assumed the uniform
+~1/3-zeros BitNet prior for every layer; ``select_kernel`` now takes the
+*measured* nonzero fraction (``density``) and live-block fraction
+(``block_density``, e.g. ``BlockSparseTernary.block_density``) so the
+per-layer choice tracks the checkpoint actually being served.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-# TPU v5e single-chip constants (also used by launch/roofline.py).
-PEAK_FLOPS_BF16 = 197e12      # FLOP/s
-PEAK_FLOPS_INT8 = 394e12      # int8 ops/s (2x bf16 on v5e MXU)
-HBM_BW = 819e9                # bytes/s
-VMEM_BYTES = 128 * 1024 * 1024
+# TPU v5e single-chip constants — shared with launch/roofline.py via core/hw.
+from repro.core.hw import (  # noqa: F401  (re-exported for back-compat)
+    HBM_BW,
+    PEAK_FLOPS_BF16,
+    PEAK_FLOPS_INT8,
+    VMEM_BYTES,
+)
+
+# The BitNet-b1.58 prior: absmean ternarization zeroes ~1/3 of the weights.
+# Used when no measured density is supplied.
+DEFAULT_DENSITY = 2.0 / 3.0
+
+# Canonical block-sparse tiling default; sparse/format re-exports it as
+# DEFAULT_BLOCK_SHAPE (defined here, the import-graph root, to avoid a
+# core <-> sparse cycle).
+SPARSE_BLOCK = (256, 256)
+
+# Issue-efficiency tax on the sparse kernel's live-block work: the
+# scalar-prefetched gather walks the pool non-sequentially (no streaming
+# prefetch), and strips with fewer live blocks than the grid's s_max still
+# burn masked steps.  Charged on compute and the weight stream, it puts the
+# analytic break-even near 1/1.1 ~ 0.9 live blocks instead of degenerately
+# at 1.0.
+SPARSE_ISSUE_TAX = 1.1
 
 
 @dataclass(frozen=True)
 class KernelChoice:
-    kernel: str          # 'tsar_lut' | 'tsar_mxu'
+    kernel: str          # 'tsar_lut' | 'tsar_mxu' | 'tsar_sparse'
     dataflow: str        # 'AP' | 'OP'
     est_time_s: float
     bound: str           # 'compute' | 'memory'
@@ -67,25 +94,104 @@ def _tsar_lut_cost(n: int, k: int, m: int, c: int) -> tuple[float, float]:
     return compute, bytes_moved / HBM_BW
 
 
-def select_kernel(n: int, k: int, m: int, c: int = 4) -> KernelChoice:
+def _tsar_sparse_cost(n: int, k: int, m: int, block_density: float,
+                      block_shape: tuple = SPARSE_BLOCK) -> tuple[float, float]:
+    """(compute_s, memory_s) for the zero-block-skipping kernel.
+
+    MXU work and weight bytes scale with the LIVE-block fraction; the index
+    map (int32 per block) and per-strip gather lists are the sparsity tax,
+    which is why the dense kernel wins at block_density ~ 1.
+    """
+    bk, bm = block_shape
+    kb, mb = max(k / bk, 1.0), max(m / bm, 1.0)
+    live = block_density * kb * mb
+    flops = 2.0 * n * bk * bm * live             # int8 MACs, live blocks only
+    decode_ops = bk * bm * live * 4.0            # bitplane unpack, live only
+    compute = SPARSE_ISSUE_TAX * (
+        flops / PEAK_FLOPS_INT8 + decode_ops / (PEAK_FLOPS_INT8 / 2))
+    bytes_moved = (
+        SPARSE_ISSUE_TAX * live * bk * bm * 0.25  # 2-bit planes, live blocks
+        + kb * mb * 4.0                          # block-index map (int32)
+        + 2.0 * live * 4.0                       # kids+slots gather lists
+        + n * k * 1.0                            # int8 activations
+        + n * m * 2.0                            # bf16 outputs
+        + m * 4.0                                # scales
+    )
+    return compute, bytes_moved / HBM_BW
+
+
+def select_kernel(n: int, k: int, m: int, c: int = 4,
+                  density: float = DEFAULT_DENSITY,
+                  block_density: float | None = None,
+                  block_shape: tuple = SPARSE_BLOCK) -> KernelChoice:
     """Compile-time per-layer selection (paper: 'empirically selects the
-    fastest kernel for each layer'); here an analytic roofline pick."""
+    fastest kernel for each layer'); here an analytic roofline pick.
+
+    ``density`` is the measured nonzero-weight fraction (defaults to the
+    BitNet ~2/3 prior); ``block_density`` the measured live-block fraction at
+    ``block_shape`` tiling.  When ``block_density`` is omitted it is estimated
+    from ``density`` assuming unstructured zeros — which makes essentially
+    every block live (``1 - (1-d)^(bk*bm) ~ 1``), so the sparse path is only
+    chosen on *measured* structured sparsity, never speculatively.
+    """
     mxu_c, mxu_m = _tsar_mxu_cost(n, k, m)
     lut_c, lut_m = _tsar_lut_cost(n, k, m, c)
+    if block_density is None:
+        bk, bm = block_shape
+        block_density = 1.0 - (1.0 - min(density, 1.0 - 1e-12)) ** (bk * bm)
+    sp_c, sp_m = _tsar_sparse_cost(n, k, m, block_density, block_shape)
     cands = {
         "tsar_mxu": max(mxu_c, mxu_m),
         "tsar_lut": max(lut_c, lut_m),
+        "tsar_sparse": max(sp_c, sp_m),
     }
-    kernel = min(cands, key=cands.get)
-    comp, mem = (mxu_c, mxu_m) if kernel == "tsar_mxu" else (lut_c, lut_m)
+    # Strict improvement required: at/above break-even the dense paths win
+    # (no format conversion for a wash).
+    dense_cands = {kn: v for kn, v in cands.items() if kn != "tsar_sparse"}
+    kernel = min(dense_cands, key=dense_cands.get)
+    if cands["tsar_sparse"] < dense_cands[kernel]:
+        kernel = "tsar_sparse"
+    comp, mem = {"tsar_mxu": (mxu_c, mxu_m), "tsar_lut": (lut_c, lut_m),
+                 "tsar_sparse": (sp_c, sp_m)}[kernel]
     dataflow = select_dataflow(n, k, m, c)
     return KernelChoice(
         kernel=kernel,
         dataflow=dataflow,
         est_time_s=cands[kernel],
         bound="compute" if comp >= mem else "memory",
-        detail={"compute_s": comp, "memory_s": mem, "candidates": cands},
+        detail={"compute_s": comp, "memory_s": mem, "candidates": cands,
+                "density": density, "block_density": block_density},
     )
+
+
+def sparse_break_even(n: int, k: int, m: int, c: int = 4,
+                      block_shape: tuple = SPARSE_BLOCK) -> float:
+    """Block density below which ``tsar_sparse`` beats the best dense kernel.
+
+    The sparse cost is monotonically increasing in block density and the
+    dense costs are constant, so the crossover is unique; found by bisection
+    to stay consistent with :func:`select_kernel` exactly.
+    """
+    mxu_c, mxu_m = _tsar_mxu_cost(n, k, m)
+    lut_c, lut_m = _tsar_lut_cost(n, k, m, c)
+    best_dense = min(max(mxu_c, mxu_m), max(lut_c, lut_m))
+
+    def sparse(bd: float) -> float:
+        sc, sm = _tsar_sparse_cost(n, k, m, bd, block_shape)
+        return max(sc, sm)
+
+    if sparse(1.0) < best_dense:
+        return 1.0
+    if sparse(0.0) >= best_dense:
+        return 0.0
+    lo, hi = 0.0, 1.0
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if sparse(mid) < best_dense:
+            lo = mid
+        else:
+            hi = mid
+    return lo
 
 
 def select_dataflow(n: int, k: int, m: int, c: int = 4,

@@ -1,0 +1,13 @@
+"""TPU v5e single-chip hardware constants — the one shared definition.
+
+Previously duplicated between ``core/dataflow.py`` (kernel selection cost
+model) and ``launch/roofline.py`` (dry-run roofline extraction); both now
+import from here so a calibration tweak cannot desynchronize the two models.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+PEAK_FLOPS_INT8 = 394e12       # int8 ops/s (2x bf16 on the v5e MXU)
+HBM_BW = 819e9                 # bytes/s
+VMEM_BYTES = 128 * 1024 * 1024
+ICI_LINK_BW = 50e9             # bytes/s per ICI link (~ spec value)

@@ -89,7 +89,15 @@ def tsar_lut_matmul(
 
     LUTs are built on the fly from ``a`` and consumed immediately — they never
     appear as function inputs, mirroring the register-resident dataflow.
+
+    Ragged K (``pack_indices`` zero-padded the tail block): the activations
+    are zero-padded to match — pad positions carry the idx_zero bit, so each
+    contributes ``2*0 + a_i - a_i = 0`` exactly.
     """
+    kp = idx_pos.shape[-2] * c
+    k = a.shape[-1]
+    if kp != k:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, kp - k)])
     s = build_lut(a, c)                          # (..., B, 2^c)
     tot = block_sums(a, c)                       # (..., B)
     # Gather per output channel: S[..., b, idx[b, m]].

@@ -38,8 +38,8 @@ class TernaryWeights(NamedTuple):
     ``bk // 8`` bytes per output channel per plane.
     """
 
-    sign_plane: jax.Array   # uint8 (K//8, M)  bit=1 where w == -1 (sign of dense plane)
-    zero_plane: jax.Array   # uint8 (K//8, M)  bit=1 where w == 0
+    sign_plane: jax.Array   # uint8 (ceil(K/8), M)  bit=1 where w == -1 (sign of dense plane)
+    zero_plane: jax.Array   # uint8 (ceil(K/8), M)  bit=1 where w == 0
     scale: jax.Array        # f32   (M,) per-output-channel dequant scale
     shape: tuple            # static logical (K, M)
 
@@ -90,16 +90,24 @@ def recompose(w_d: jax.Array, w_s: jax.Array) -> jax.Array:
     return w_d - w_s
 
 
-def _pack_bits(bits: jax.Array) -> jax.Array:
-    """Pack a ``{0,1}`` array along axis 0: (K, ...) uint -> (K//8, ...) uint8.
+def _pack_bits(bits: jax.Array, pad_value: int = 0) -> jax.Array:
+    """Pack a ``{0,1}`` array along axis 0: (K, ...) uint -> (ceil(K/8), ...)
+    uint8.
 
     Bit i of byte j holds element ``j*8 + i`` (LSB-first), matching the
-    unpacking order in the Pallas kernels.
+    unpacking order in the Pallas kernels.  A ragged tail (K not a multiple
+    of 8) is padded with ``pad_value`` bits; :func:`_unpack_bits` slices them
+    off.  :func:`pack` pads the zero plane with 1s so pad positions decode to
+    weight 0 — consumers that can't know the true K (density telemetry, the
+    MoE stacked decode) then see harmless zeros instead of phantom +1s.
     """
     k = bits.shape[0]
-    if k % PACK != 0:
-        raise ValueError(f"K={k} must be a multiple of {PACK} for packing")
-    b = bits.astype(jnp.uint8).reshape((k // PACK, PACK) + bits.shape[1:])
+    pad = (-k) % PACK
+    if pad:
+        widths = [(0, pad)] + [(0, 0)] * (bits.ndim - 1)
+        bits = jnp.pad(bits, widths, constant_values=pad_value)
+    kp = k + pad
+    b = bits.astype(jnp.uint8).reshape((kp // PACK, PACK) + bits.shape[1:])
     shifts = jnp.arange(PACK, dtype=jnp.uint8).reshape((1, PACK) + (1,) * (bits.ndim - 1))
     return jnp.sum(b << shifts, axis=1).astype(jnp.uint8)
 
@@ -108,7 +116,8 @@ def _unpack_bits(packed: jax.Array, k: int) -> jax.Array:
     """Inverse of :func:`_pack_bits` -> int8 {0,1} of shape (k, ...)."""
     shifts = jnp.arange(PACK, dtype=jnp.uint8).reshape((1, PACK) + (1,) * (packed.ndim - 1))
     bits = (packed[:, None] >> shifts) & jnp.uint8(1)
-    return bits.reshape((k,) + packed.shape[1:]).astype(jnp.int8)
+    kp = packed.shape[0] * PACK
+    return bits.reshape((kp,) + packed.shape[1:])[:k].astype(jnp.int8)
 
 
 def pack(t: jax.Array, scale: jax.Array | None = None) -> TernaryWeights:
@@ -126,7 +135,7 @@ def pack(t: jax.Array, scale: jax.Array | None = None) -> TernaryWeights:
     zero = (t == 0)
     return TernaryWeights(
         sign_plane=_pack_bits(sign),
-        zero_plane=_pack_bits(zero),
+        zero_plane=_pack_bits(zero, pad_value=1),   # ragged tail decodes to 0
         scale=scale.astype(jnp.float32),
         shape=(k, m),
     )
@@ -161,13 +170,44 @@ def pack_indices(t: jax.Array, c: int) -> tuple[jax.Array, jax.Array]:
     if c > 8:
         raise ValueError("block size c must be <= 8 to fit uint8 indices")
     k, m = t.shape
-    if k % c != 0:
-        raise ValueError(f"K={k} not a multiple of block size c={c}")
-    blocks = t.reshape(k // c, c, m)
+    pad = (-k) % c
+    if pad:
+        # Pad with zeros: pad positions get their idx_s bit set (value 0), so
+        # the LUT identity contributes 2*0 + a_i - a_i = 0 per pad position.
+        t = jnp.pad(t, ((0, pad), (0, 0)))
+    blocks = t.reshape((k + pad) // c, c, m)
     shifts = (1 << jnp.arange(c, dtype=jnp.int32)).reshape(1, c, 1)
     idx_d = jnp.sum(jnp.where(blocks > 0, shifts, 0), axis=1).astype(jnp.uint8)
     idx_s = jnp.sum(jnp.where(blocks == 0, shifts, 0), axis=1).astype(jnp.uint8)
     return idx_d, idx_s
+
+
+def unpack_indices(idx_d: jax.Array, idx_s: jax.Array, c: int, k: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_indices` -> dense ternary (k, M) int8.
+
+    ``k`` recovers a ragged tail that :func:`pack_indices` zero-padded; it
+    defaults to the full ``blocks * c`` rows.
+    """
+    blocks, m = idx_d.shape
+    kp = blocks * c
+    if k is None:
+        k = kp
+    shifts = jnp.arange(c, dtype=jnp.int32).reshape(1, c, 1)
+    bit_d = (idx_d[:, None, :].astype(jnp.int32) >> shifts) & 1   # 1 => w == +1
+    bit_s = (idx_s[:, None, :].astype(jnp.int32) >> shifts) & 1   # 1 => w == 0
+    vals = jnp.where(bit_d == 1, 1, jnp.where(bit_s == 1, 0, -1))
+    return vals.reshape(kp, m)[:k].astype(jnp.int8)
+
+
+def zero_plane_density(zero_plane: jax.Array, k: int) -> jax.Array:
+    """Nonzero-weight fraction measured from a packed zero plane.
+
+    ``zero_plane`` (ceil(K/8), M) uint8 (leading batch dims allowed on the
+    *trailing* side, matching the plane layout); bit=1 marks a zero weight.
+    Pad bits beyond ``k`` are excluded.
+    """
+    bits = _unpack_bits(zero_plane, k).astype(jnp.float32)   # (k, ...) {0,1}
+    return 1.0 - jnp.mean(bits)
 
 
 def quantize_activations(a: jax.Array, eps: float = 1e-6) -> tuple[jax.Array, jax.Array]:

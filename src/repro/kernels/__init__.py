@@ -2,7 +2,11 @@
 
 * ``tsar_matmul`` — production packed-ternary matmul (decode-in-VMEM -> MXU).
 * ``tsar_lut`` — paper-faithful in-VMEM TLUT/TGEMV kernel.
+* ``tsar_sparse`` — zero-block-skipping matmul over a compacted
+  ``BlockSparseTernary`` pool (scalar-prefetched block-id gather).
 * ``ops`` — jitted public wrappers (padding, quant, interpret fallback).
 * ``ref`` — pure-jnp oracles.
+
+See ``docs/kernels.md`` for the kernel zoo and when each path wins.
 """
 from repro.kernels import ops, ref  # noqa: F401

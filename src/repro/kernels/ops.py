@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from repro.core import ternary
 from repro.kernels import tsar_lut as _lut_kernel
 from repro.kernels import tsar_matmul as _mxu_kernel
+from repro.kernels import tsar_sparse as _sparse_kernel
+from repro.sparse import format as sparse_format
 
 
 def _auto_interpret() -> bool:
@@ -81,6 +83,52 @@ def tsar_matmul(
     return y[:n, :m].reshape(lead + (m,))
 
 
+def tsar_sparse_matmul(
+    x: jax.Array,
+    bst: "sparse_format.BlockSparseTernary",
+    *,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """BitLinear matmul via the zero-block-skipping sparse kernel.
+
+    ``x`` (..., K) float -> (..., M) float32.  Same pipeline as
+    :func:`tsar_matmul` (per-token int8 quant -> int32 accumulate -> fused
+    dequant) but weights come from a compacted :class:`BlockSparseTernary`
+    pool and dead (bk, bm) blocks are skipped entirely — the inner grid runs
+    over LIVE blocks per m-strip, so interpret-mode cost (and on TPU, HBM
+    traffic + MXU issue) drops with block density.  Output is bit-identical
+    to the dense path: skipped blocks contribute exactly 0 in int32.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    k, m = bst.shape
+    bk, bm = bst.block_shape
+    kb, mb = bst.grid
+    lead = x.shape[:-1]
+    n = 1
+    for d in lead:
+        n *= d
+    x2 = x.reshape(n, k).astype(jnp.float32)
+
+    a_q, a_scale = ternary.quantize_activations(x2)
+
+    bn_ = _tile(n, bn, 8)
+    # Pad activations to the format's padded K (pad columns hit zero-padded
+    # weight tails inside edge blocks — or dead blocks — so they are exact).
+    a_q = _pad_to(_pad_to(a_q, 0, bn_), 1, kb * bk)
+    a_scale = _pad_to(a_scale, 0, bn_)
+    wsc = _pad_to(bst.scale, 0, mb * bm)
+
+    kids, slots, counts, s_max = sparse_format.strip_schedule(bst)
+    y = _sparse_kernel.tsar_sparse_matmul_packed(
+        a_q, a_scale, bst.sign_pool, bst.zero_pool, kids, slots, counts,
+        wsc.reshape(1, mb * bm),
+        bn=bn_, bk=bk, bm=bm, s_steps=max(s_max, 1), interpret=interpret,
+    )
+    return y[:n, :m].reshape(lead + (m,))
+
+
 def tsar_lut_gemv(
     x: jax.Array,
     idx_pos: jax.Array,
@@ -99,7 +147,7 @@ def tsar_lut_gemv(
     if interpret is None:
         interpret = _auto_interpret()
     blocks, m = idx_pos.shape
-    k = blocks * c
+    k = x.shape[-1]                 # true K; blocks*c >= k for ragged layers
     lead = x.shape[:-1]
     n = 1
     for d in lead:
@@ -110,8 +158,9 @@ def tsar_lut_gemv(
     bm_ = _tile(m, bm, 128)
 
     # Padded activation channels are zero, so padded-block LUT entries are all
-    # zero and any index gathers 0 — padding is exact.
-    x2 = _pad_to(x2, 1, bb_ * c)
+    # zero and any index gathers 0 — padding is exact.  This also covers a
+    # ragged tail block (pack_indices zero-padded K up to blocks*c).
+    x2 = _pad_to(_pad_to(x2, 1, blocks * c), 1, bb_ * c)
     ip = _pad_to(_pad_to(idx_pos, 0, bb_), 1, bm_)
     iz = _pad_to(_pad_to(idx_zero, 0, bb_), 1, bm_)
     wsc = _pad_to(w_scale, 0, bm_)

@@ -36,3 +36,20 @@ def quantized_matmul_ref(a: jax.Array, tw: ternary.TernaryWeights) -> jax.Array:
         preferred_element_type=jnp.int32,
     )
     return acc.astype(jnp.float32) * a_scale * tw.scale
+
+
+def block_sparse_matmul_ref(a: jax.Array, bst) -> jax.Array:
+    """Oracle for the zero-block-skipping path: decompact the block pool back
+    to a dense ternary matrix, then run the exact quantized pipeline.  The
+    sparse Pallas kernel must match this bit-for-bit (skipped blocks are
+    exact int32 zeros)."""
+    from repro.sparse import format as sparse_format
+
+    t = sparse_format.to_ternary(bst)
+    a_q, a_scale = ternary.quantize_activations(a.astype(jnp.float32))
+    acc = jax.lax.dot_general(
+        a_q, t,
+        dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * a_scale * bst.scale

@@ -19,10 +19,9 @@ import json
 import re
 from dataclasses import asdict, dataclass
 
-# TPU v5e hardware constants (per chip).
-PEAK_FLOPS_BF16 = 197e12       # FLOP/s
-HBM_BW = 819e9                 # bytes/s
-ICI_LINK_BW = 50e9             # bytes/s per link (~ spec value)
+# TPU v5e hardware constants (per chip) — shared with core/dataflow via
+# core/hw so the dispatch cost model and the dry-run roofline can't drift.
+from repro.core.hw import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16  # noqa: F401
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

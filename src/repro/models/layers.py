@@ -70,16 +70,26 @@ def _packed_linear(p: dict, x: jax.Array) -> jax.Array:
 def _unpack_plane_nd(plane: jax.Array, k: int) -> jax.Array:
     shifts = jnp.arange(8, dtype=jnp.uint8).reshape((1, 8) + (1,) * (plane.ndim - 1))
     bits = (plane[:, None] >> shifts) & jnp.uint8(1)
-    return bits.reshape((k,) + plane.shape[1:]).astype(jnp.int8)
+    kp = plane.shape[0] * 8   # ragged K: planes carry zero-padded tail bits
+    return bits.reshape((kp,) + plane.shape[1:])[:k].astype(jnp.int8)
 
 
 def pack_linear(p: dict) -> dict:
-    """Freeze one linear layer's latent weights to 2-bit planes (+ scale)."""
+    """Freeze one linear layer's latent weights to 2-bit planes (+ scale).
+
+    Also stamps the measured nonzero-weight ``density`` — a scalar leaf that
+    rides the params tree (vmap-stacked for scan layers / experts) so the
+    density profiler (``sparse.stats.profile_params``, surfaced as the
+    serving engine's init telemetry) reads the freeze-time measurement
+    instead of re-deriving it from the planes.  The forward path
+    (:func:`_packed_linear`) ignores it.
+    """
     if "w" not in p:
         return p
     t, scale = ternary.absmean_ternarize(p["w"])
     tw = ternary.pack(t, scale)
-    return {"sign": tw.sign_plane, "zero": tw.zero_plane, "scale": tw.scale}
+    return {"sign": tw.sign_plane, "zero": tw.zero_plane, "scale": tw.scale,
+            "density": ternary.ternary_density(t)}
 
 
 # ---------------------------------------------------------------------------

@@ -99,6 +99,28 @@ def freeze_params(params) -> dict:
     return walk(params)
 
 
+def density_telemetry(params) -> dict | None:
+    """Per-layer weight-density profile of a packed params tree (host-side).
+
+    Returns ``sparse.stats.summarize`` output plus the full per-layer
+    profile, or None when the tree has no packed/latent BitLinear leaves or
+    is abstract (``jax.eval_shape``).  This is the serving-side surface of
+    the density signal: operators see, per deployment, how far the
+    checkpoint sits from the ``tsar_sparse`` break-even.
+    """
+    from repro.sparse import stats as sparse_stats
+
+    try:
+        profile = sparse_stats.profile_params(params)
+    except (jax.errors.TracerArrayConversionError, TypeError):
+        return None
+    if not profile:
+        return None
+    out = sparse_stats.summarize(profile)
+    out["profile"] = profile
+    return out
+
+
 def packed_fraction(params) -> float:
     """Diagnostic: fraction of param bytes in 2-bit packed form."""
     packed, total = 0, 0
@@ -144,7 +166,8 @@ class ServingEngine:
     def __init__(self, cfg, params, *, max_len: int = 512, batch_slots: int = 4,
                  packed: bool = False, cache_dtype=jnp.float32, seed: int = 0,
                  prefill_chunk: int = 16, block_size: int = 16,
-                 kv_blocks: int | None = None, policy: str | None = None):
+                 kv_blocks: int | None = None, policy: str | None = None,
+                 profile_density: bool = True):
         self.cfg = cfg
         self.params = freeze_params(params) if packed else params
         self.max_len = max_len
@@ -174,6 +197,16 @@ class ServingEngine:
             "steps": 0, "whole_prefills": 0, "preemptions": 0,
             "peak_kv_blocks": 0, "max_step_tokens": 0,
         }
+        # Density telemetry: measured once at init from the packed planes so
+        # the sparse-dispatch signal is visible per deployment.  The profile
+        # decodes one stacked layer slice at a time (bounded host transient)
+        # but still walks every plane — pass profile_density=False to skip it
+        # for latency-critical starts on very large models.
+        self.density = (density_telemetry(self.params)
+                        if packed and profile_density else None)
+        if self.density is not None:
+            self.stats["weight_density_mean"] = self.density["density_mean"]
+            self.stats["block_density_mean"] = self.density["block_density_mean"]
 
         # Donating the pools lets XLA update the block pools in place instead
         # of holding input + output copies alive across the step (on backends

@@ -1,0 +1,13 @@
+"""Sparsity-aware ternary subsystem: block-sparse packing + density profiling.
+
+* ``format`` — :class:`BlockSparseTernary`: (bk, bm)-tiled ternary weights
+  with only live blocks' 2-bit bitplanes kept in a compacted pool, plus the
+  block-index map the zero-skipping kernel walks.
+* ``stats`` — per-layer / per-block density profiling over packed params.
+
+The matching Pallas kernel lives in ``repro.kernels.tsar_sparse`` (wrapper:
+``repro.kernels.ops.tsar_sparse_matmul``); the density-driven dispatch in
+``repro.core.dataflow.select_kernel``.
+"""
+from repro.sparse import format, stats  # noqa: F401
+from repro.sparse.format import BlockSparseTernary  # noqa: F401

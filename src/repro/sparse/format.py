@@ -1,0 +1,261 @@
+"""Block-sparse ternary weight format: compacted bitplane pool + block map.
+
+T-SAR's dense/sparse bitplane decomposition (``core/ternary``) stores the
+zero plane but never *exploits* it: every kernel streams all K x M packed
+positions even when whole (bk, bm) blocks of a BitNet-style checkpoint are
+exactly zero.  ``BlockSparseTernary`` tiles the ternary matrix into (bk, bm)
+blocks and keeps only the live (any-nonzero) blocks:
+
+* ``sign_pool`` / ``zero_pool`` — uint8 (n_slots, bk//8, bm): the 2-bit
+  bitplanes of each live block, compacted in block-raster order.  Dead blocks
+  cost zero pool bytes.
+* ``block_map`` — int32 (K/bk, M/bm): grid position -> pool slot, ``-1`` for
+  an all-zero block.  This is the index map the ``tsar_sparse`` Pallas kernel
+  walks (via :func:`strip_schedule`) to skip dead blocks entirely.
+* ``occupancy`` — f32 (K/bk, M/bm): per-tile nonzero fraction, the metadata
+  that feeds the density-driven kernel dispatch (``core/dataflow``) and the
+  profiling report (``sparse/stats``).
+
+Construction compacts data-dependently (the pool size depends on the weight
+values), so the builders run host-side on concrete arrays — exactly like the
+paper's compile-time weight encoding, and like ``bitlinear.freeze``.  Ragged
+K/M are zero-padded up to block multiples; padding creates *dead* blocks (or
+zero tails inside edge blocks), so the round-trip back to a dense ternary
+matrix / ``TernaryWeights`` is exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ternary
+# One canonical default tiling, shared with the dispatch cost model so the
+# formats being built and the break-even being computed can't drift.  The
+# dense Pallas kernel's (bk=512, bm=256) would waste skip granularity;
+# 256x256 keeps MXU-sized tiles while giving the zero-skip logic 4x finer
+# blocks along K.
+from repro.core.dataflow import SPARSE_BLOCK as DEFAULT_BLOCK_SHAPE
+
+DEFAULT_BK, DEFAULT_BM = DEFAULT_BLOCK_SHAPE
+
+
+class BlockSparseTernary(NamedTuple):
+    """Compacted block-sparse 2-bit ternary weights (frozen, inference-only).
+
+    The per-m-strip kernel schedule (``kids``/``slots``/``counts``/``s_max``)
+    is derived from ``block_map`` once at construction so the hot path never
+    re-runs the host-side compaction walk per matmul call.
+    """
+
+    sign_pool: jax.Array    # uint8 (n_slots, bk//8, bm)
+    zero_pool: jax.Array    # uint8 (n_slots, bk//8, bm)
+    block_map: jax.Array    # int32 (kb, mb)  pool slot, -1 = all-zero block
+    occupancy: jax.Array    # f32   (kb, mb)  nonzero fraction per block
+    scale: jax.Array        # f32   (M,) per-output-channel dequant scale
+    shape: tuple            # static logical (K, M)
+    block_shape: tuple      # static (bk, bm)
+    n_live: int             # static number of live blocks (pool slots used)
+    kids: jax.Array         # int32 (mb, max(s_max,1)) live k-block ids per strip
+    slots: jax.Array        # int32 (mb, max(s_max,1)) matching pool slots
+    counts: jax.Array       # int32 (mb,) live blocks per strip
+    s_max: int              # static max live blocks over strips
+
+    @property
+    def k(self) -> int:
+        return self.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.shape[1]
+
+    @property
+    def grid(self) -> tuple:
+        """(kb, mb) block-grid dims (over the zero-padded logical shape)."""
+        bk, bm = self.block_shape
+        return (-(-self.shape[0] // bk), -(-self.shape[1] // bm))
+
+    @property
+    def block_density(self) -> float:
+        """Fraction of blocks that are live — the dispatch signal."""
+        kb, mb = self.grid
+        return self.n_live / max(kb * mb, 1)
+
+    def nbytes(self) -> int:
+        """HBM bytes: compacted pools + block map + occupancy + scales.
+
+        Only ``n_live`` slots count (the pool pads to >= 1 slot so XLA never
+        sees a zero-sized array; the pad slot stores no weights).
+        """
+        bk, bm = self.block_shape
+        pool = 2 * self.n_live * (bk // ternary.PACK) * bm
+        return int(pool + self.block_map.size * 4 + self.occupancy.size * 4
+                   + self.scale.size * 4)
+
+
+def from_ternary(
+    t: jax.Array,
+    scale: jax.Array | None = None,
+    bk: int = DEFAULT_BK,
+    bm: int = DEFAULT_BM,
+    occupancy: np.ndarray | None = None,
+) -> BlockSparseTernary:
+    """Tile a dense ternary (K, M) matrix into a compacted block pool.
+
+    Host-side (concrete arrays only): the pool size is data-dependent.
+    ``occupancy`` accepts a precomputed ``stats.block_occupancy(t, bk, bm)``
+    grid so callers that already measured it (``bitlinear.freeze``) don't pay
+    the popcount twice.
+    """
+    if t.ndim != 2:
+        raise ValueError(f"from_ternary expects a 2-D (K, M) matrix, got {t.shape}")
+    if bk % ternary.PACK != 0:
+        raise ValueError(f"bk={bk} must be a multiple of {ternary.PACK}")
+    tn = np.asarray(t, np.int8)
+    k, m = tn.shape
+    if scale is None:
+        scale = jnp.ones((m,), jnp.float32)
+    kb, mb = -(-k // bk), -(-m // bm)
+    pad_k, pad_m = kb * bk - k, mb * bm - m
+    if pad_k or pad_m:
+        tn = np.pad(tn, ((0, pad_k), (0, pad_m)))
+
+    # (kb, mb, bk, bm) block view.
+    blocks = tn.reshape(kb, bk, mb, bm).transpose(0, 2, 1, 3)
+    if occupancy is None:
+        occ = np.count_nonzero(blocks, axis=(2, 3)).astype(np.float32) / (bk * bm)
+    else:
+        occ = np.asarray(occupancy, np.float32)
+        if occ.shape != (kb, mb):
+            raise ValueError(f"occupancy grid {occ.shape} != block grid {(kb, mb)}")
+    live = occ > 0.0
+    n_live = int(live.sum())
+
+    block_map = np.full((kb, mb), -1, np.int32)
+    block_map[live] = np.arange(n_live, dtype=np.int32)
+
+    n_slots = max(n_live, 1)            # never materialize a 0-sized pool
+    sign_pool = np.zeros((n_slots, bk // ternary.PACK, bm), np.uint8)
+    zero_pool = np.zeros((n_slots, bk // ternary.PACK, bm), np.uint8)
+    if n_live:
+        lv = blocks[live]                                    # (n_live, bk, bm)
+        sign = (lv < 0).astype(np.uint8)
+        zero = (lv == 0).astype(np.uint8)
+        pack = lambda b: np.packbits(
+            b.reshape(n_live, bk // ternary.PACK, ternary.PACK, bm),
+            axis=2, bitorder="little").reshape(n_live, bk // ternary.PACK, bm)
+        sign_pool = pack(sign)
+        zero_pool = pack(zero)
+    else:
+        # Dead-block pad slot must still decode to value 0, not +1 (the
+        # sparse kernel masks its contribution, but the round-trip reads it
+        # for no block, so this only guards against misuse).
+        zero_pool[:] = 0xFF
+
+    kids, slots, counts, s_max = _strip_schedule_np(block_map)
+    return BlockSparseTernary(
+        sign_pool=jnp.asarray(sign_pool),
+        zero_pool=jnp.asarray(zero_pool),
+        block_map=jnp.asarray(block_map),
+        occupancy=jnp.asarray(occ),
+        scale=jnp.asarray(scale, jnp.float32),
+        shape=(k, m),
+        block_shape=(bk, bm),
+        n_live=n_live,
+        kids=jnp.asarray(kids),
+        slots=jnp.asarray(slots),
+        counts=jnp.asarray(counts),
+        s_max=s_max,
+    )
+
+
+def from_packed(tw: ternary.TernaryWeights, bk: int = DEFAULT_BK,
+                bm: int = DEFAULT_BM) -> BlockSparseTernary:
+    """``TernaryWeights`` (dense 2-bit planes) -> block-sparse pool."""
+    return from_ternary(ternary.unpack(tw), tw.scale, bk=bk, bm=bm)
+
+
+def to_ternary(bst: BlockSparseTernary) -> jax.Array:
+    """Exact inverse of :func:`from_ternary` -> dense ternary (K, M) int8."""
+    bk, bm = bst.block_shape
+    kb, mb = bst.grid
+    k, m = bst.shape
+    bmap = np.asarray(bst.block_map)
+    sp = np.asarray(bst.sign_pool)
+    zp = np.asarray(bst.zero_pool)
+
+    out = np.zeros((kb, mb, bk, bm), np.int8)
+    for i in range(kb):
+        for j in range(mb):
+            slot = int(bmap[i, j])
+            if slot < 0:
+                continue
+            sign = np.unpackbits(sp[slot], axis=0, bitorder="little",
+                                 count=bk).astype(np.int8)
+            zero = np.unpackbits(zp[slot], axis=0, bitorder="little",
+                                 count=bk).astype(np.int8)
+            out[i, j] = (1 - 2 * sign) * (1 - zero)
+    dense = out.transpose(0, 2, 1, 3).reshape(kb * bk, mb * bm)
+    return jnp.asarray(dense[:k, :m])
+
+
+def to_packed(bst: BlockSparseTernary) -> ternary.TernaryWeights:
+    """Exact round-trip back to dense ``TernaryWeights``."""
+    return ternary.pack(to_ternary(bst).astype(jnp.float32), bst.scale)
+
+
+def _strip_schedule_np(bmap: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Per-m-strip gather lists derived from a block map (construction time).
+
+    Returns ``(kids, slots, counts, s_max)``:
+
+    * ``kids``   int32 (mb, s_max) — the s-th live block's k-block index in
+      strip j (padded with 0 past ``counts[j]``);
+    * ``slots``  int32 (mb, s_max) — matching pool slot (padded with 0, a
+      valid slot, so the padded DMA reads real memory; the kernel masks it);
+    * ``counts`` int32 (mb,) — live blocks per strip;
+    * ``s_max``  — max live blocks over strips == the kernel's inner grid
+      extent; the whole point: grid work scales with live blocks, not K.
+    """
+    kb, mb = bmap.shape
+    counts = (bmap >= 0).sum(axis=0).astype(np.int32)
+    s_max = int(counts.max()) if mb else 0
+    kids = np.zeros((mb, max(s_max, 1)), np.int32)
+    slots = np.zeros((mb, max(s_max, 1)), np.int32)
+    for j in range(mb):
+        lv = np.nonzero(bmap[:, j] >= 0)[0]
+        kids[j, : len(lv)] = lv
+        slots[j, : len(lv)] = bmap[lv, j]
+    return kids, slots, counts, s_max
+
+
+def strip_schedule(bst: BlockSparseTernary) -> tuple[jax.Array, jax.Array, jax.Array, int]:
+    """The kernel schedule — precomputed at construction, returned as-is."""
+    return bst.kids, bst.slots, bst.counts, bst.s_max
+
+
+def random_block_sparse_ternary(
+    key: jax.Array,
+    shape: tuple,
+    bk: int = DEFAULT_BK,
+    bm: int = DEFAULT_BM,
+    p_zero_block: float = 0.5,
+    p_zero: float = 1.0 / 3.0,
+) -> jax.Array:
+    """Random ternary matrix with *block-structured* sparsity (int8).
+
+    Whole (bk, bm) blocks are zeroed with probability ``p_zero_block``; the
+    surviving blocks carry the usual unstructured ``p_zero`` zeros.  This is
+    the workload where zero-block skipping pays: unstructured sparsity almost
+    never kills a whole 256x256 block ((1/3)^65536 ~ 0), so benchmarks sweep
+    the block-kill rate instead.
+    """
+    k, m = shape
+    kb, mb = -(-k // bk), -(-m // bm)
+    kz, kt = jax.random.split(key)
+    dead = jax.random.bernoulli(kz, p_zero_block, (kb, mb))
+    mask = 1 - jnp.repeat(jnp.repeat(dead.astype(jnp.int8), bk, 0), bm, 1)
+    t = ternary.random_ternary(kt, (kb * bk, mb * bm), p_zero)
+    return (t * mask)[:k, :m]

@@ -1,0 +1,158 @@
+"""Density profiling: per-layer and per-block zero statistics of a packed model.
+
+This is the measurement half of the density-driven dispatch: ``profile_params``
+walks a params pytree (either frozen packed dicts ``{'sign','zero','scale',...}``
+as produced by ``models.layers.pack_linear`` / ``serving.engine.freeze_params``,
+or latent ``{'w'}`` dicts which are ternarized on the fly) and reports, per
+BitLinear layer:
+
+* overall nonzero-weight density (the zero plane's popcount);
+* the block-occupancy histogram at a given (bk, bm) tiling;
+* the live-block fraction — the number the ``tsar_sparse`` cost model needs.
+
+Everything runs host-side on concrete arrays (numpy); the serving engine calls
+it once at init for telemetry, never inside a jitted step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ternary
+from repro.sparse import format as sparse_format
+
+
+def weight_density(t) -> float:
+    """Nonzero fraction of a dense ternary matrix (any leading batch dims)."""
+    tn = np.asarray(t)
+    return float(np.count_nonzero(tn)) / max(tn.size, 1)
+
+
+def block_occupancy(t, bk: int = sparse_format.DEFAULT_BK,
+                    bm: int = sparse_format.DEFAULT_BM) -> np.ndarray:
+    """Per-block nonzero fraction of a ternary (K, M) matrix -> (kb, mb) f32.
+
+    Ragged edges are zero-padded (padding counts as zeros), matching
+    ``BlockSparseTernary`` occupancy exactly.
+    """
+    tn = np.asarray(t, np.int8)
+    k, m = tn.shape
+    kb, mb = -(-k // bk), -(-m // bm)
+    tn = np.pad(tn, ((0, kb * bk - k), (0, mb * bm - m)))
+    blocks = tn.reshape(kb, bk, mb, bm).transpose(0, 2, 1, 3)
+    return np.count_nonzero(blocks, axis=(2, 3)).astype(np.float32) / (bk * bm)
+
+
+def occupancy_histogram(occ: np.ndarray, bins: int = 10) -> tuple[np.ndarray, np.ndarray]:
+    """Histogram of per-block occupancies over [0, 1]."""
+    return np.histogram(np.asarray(occ).ravel(), bins=bins, range=(0.0, 1.0))
+
+
+def _decode_planes(sign: np.ndarray, zero: np.ndarray) -> np.ndarray:
+    """One layer's (K//8, M) planes -> dense ternary (K', M) int8.
+
+    K' is the padded ``K//8 * 8``; ragged-K pad bits carry zero_plane=1
+    (``ternary._pack_bits`` convention) so they decode to harmless 0s.
+    """
+    k = sign.shape[0] * ternary.PACK
+    s = np.unpackbits(sign, axis=0, bitorder="little", count=k).astype(np.int8)
+    z = np.unpackbits(zero, axis=0, bitorder="little", count=k).astype(np.int8)
+    return (1 - 2 * s) * (1 - z)
+
+
+def _layer_slices(leaf: dict):
+    """Yield dense ternary (K, M) matrices, one per stacked layer/expert.
+
+    Decodes one slice at a time so profiling a (30, K//8, M) scan stack never
+    materializes the whole stack densely.
+    """
+    if "sign" in leaf and "zero" in leaf:
+        sign, zero = np.asarray(leaf["sign"]), np.asarray(leaf["zero"])
+        s3 = sign.reshape((-1,) + sign.shape[-2:])
+        z3 = zero.reshape((-1,) + zero.shape[-2:])
+        for i in range(s3.shape[0]):
+            yield _decode_planes(s3[i], z3[i])
+    elif "w" in leaf:
+        import jax.numpy as jnp
+        t, _ = ternary.absmean_ternarize(jnp.asarray(leaf["w"]))
+        t3 = np.asarray(t, np.int8).reshape((-1,) + t.shape[-2:])
+        for i in range(t3.shape[0]):
+            yield t3[i]
+
+
+def profile_params(params, bk: int = sparse_format.DEFAULT_BK,
+                   bm: int = sparse_format.DEFAULT_BM, bins: int = 10) -> list[dict]:
+    """Per-BitLinear-layer density profile of a params pytree.
+
+    Returns a list of dicts ``{path, shape, density, block_density, hist,
+    edges}``; stacked (scan-layer / expert) weights are profiled over the full
+    stack with the last two dims as (K, M).
+    """
+    out = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            keys = set(node)
+            if {"sign", "zero"} <= keys or keys == {"w"}:
+                # One slice at a time: blocks never straddle two stacked
+                # layers and the dense transient stays one (K, M) matrix.
+                occs, nnz, size = [], 0, 0
+                for t in _layer_slices(node):
+                    occs.append(block_occupancy(t, bk, bm))
+                    nnz += int(np.count_nonzero(t))
+                    size += t.size
+                if not occs:
+                    return
+                occ = np.concatenate(occs, axis=0)
+                hist, edges = occupancy_histogram(occ, bins)
+                # pack_linear stamps the measured density at freeze time;
+                # prefer it over re-deriving from the planes (the planes'
+                # ragged pad rows count as zeros, the stamp does not).
+                if "density" in node:
+                    density = float(np.mean(np.asarray(node["density"])))
+                else:
+                    density = nnz / max(size, 1)
+                if "sign" in node:
+                    ps = node["sign"].shape
+                    shape = tuple(ps[:-2]) + (ps[-2] * ternary.PACK, ps[-1])
+                else:
+                    shape = tuple(node["w"].shape)
+                out.append({
+                    "path": path,
+                    "shape": shape,
+                    "density": density,
+                    "block_density": float((occ > 0).mean()),
+                    "hist": hist,
+                    "edges": edges,
+                })
+                return
+            for k in sorted(node):
+                walk(node[k], f"{path}/{k}" if path else str(k))
+
+    walk(params, "")
+    return out
+
+
+def summarize(profile: list[dict]) -> dict:
+    """Aggregate a :func:`profile_params` report into scalar telemetry."""
+    if not profile:
+        return {"layers": 0, "density_mean": float("nan"),
+                "density_min": float("nan"), "block_density_mean": float("nan")}
+    d = [p["density"] for p in profile]
+    b = [p["block_density"] for p in profile]
+    return {
+        "layers": len(profile),
+        "density_mean": sum(d) / len(d),
+        "density_min": min(d),
+        "block_density_mean": sum(b) / len(b),
+    }
+
+
+def format_report(profile: list[dict]) -> str:
+    """Human-readable per-layer density table."""
+    lines = [f"| {'layer':40s} | {'shape':>16s} | density | blk_dens |",
+             "|" + "-" * 76 + "|"]
+    for p in profile:
+        lines.append(
+            f"| {p['path'][:40]:40s} | {str(p['shape']):>16s} "
+            f"| {p['density']:7.3f} | {p['block_density']:8.3f} |")
+    return "\n".join(lines)

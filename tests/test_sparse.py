@@ -1,0 +1,234 @@
+"""Sparsity subsystem: block-sparse format round-trips, zero-skipping kernel
+exactness vs the dense path, density-driven dispatch, and profiling stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import bitlinear, dataflow, ternary
+from repro.kernels import ops, ref
+from repro.sparse import format as sparse_format
+from repro.sparse import stats as sparse_stats
+
+P_ZERO_SWEEP = (0.1, 1.0 / 3.0, 0.6, 0.9)
+
+
+def _rand(seed, k, m, p_zero=1.0 / 3.0):
+    return ternary.random_ternary(jax.random.PRNGKey(seed), (k, m), p_zero)
+
+
+class TestBlockSparseFormat:
+    @pytest.mark.parametrize("k,m,bk,bm", [
+        (256, 256, 128, 128), (512, 384, 256, 128),
+        (300, 200, 128, 128),            # ragged K and M
+        (128, 128, 128, 128),            # single block
+    ])
+    def test_roundtrip_to_ternary(self, k, m, bk, bm):
+        t = _rand(k + m, k, m)
+        bst = sparse_format.from_ternary(t, bk=bk, bm=bm)
+        np.testing.assert_array_equal(np.asarray(sparse_format.to_ternary(bst)),
+                                      np.asarray(t))
+
+    @pytest.mark.parametrize("p_zero", [0.0, 1.0])
+    def test_roundtrip_extreme_densities(self, p_zero):
+        """Density 1.0 (no zeros: every block live) and 0.0 (all zeros:
+        empty pool) both round-trip exactly."""
+        t = _rand(7, 384, 256, p_zero=p_zero)
+        bst = sparse_format.from_ternary(t, bk=128, bm=128)
+        kb, mb = bst.grid
+        if p_zero == 1.0:
+            assert bst.n_live == 0 and bst.block_density == 0.0
+        else:
+            assert bst.n_live == kb * mb and bst.block_density == 1.0
+        np.testing.assert_array_equal(np.asarray(sparse_format.to_ternary(bst)),
+                                      np.asarray(t))
+
+    def test_roundtrip_to_packed(self):
+        t = _rand(11, 512, 256)
+        scale = jax.random.uniform(jax.random.PRNGKey(1), (256,), minval=0.5, maxval=2.0)
+        tw = ternary.pack(t.astype(jnp.float32), scale)
+        bst = sparse_format.from_packed(tw, bk=128, bm=128)
+        tw2 = sparse_format.to_packed(bst)
+        np.testing.assert_array_equal(np.asarray(tw2.sign_plane), np.asarray(tw.sign_plane))
+        np.testing.assert_array_equal(np.asarray(tw2.zero_plane), np.asarray(tw.zero_plane))
+        np.testing.assert_allclose(np.asarray(tw2.scale), np.asarray(tw.scale))
+
+    def test_dead_blocks_cost_no_pool_bytes(self):
+        key = jax.random.PRNGKey(3)
+        t_dense = sparse_format.random_block_sparse_ternary(
+            key, (512, 512), bk=128, bm=128, p_zero_block=0.0)
+        t_half = t_dense * sparse_format.random_block_sparse_ternary(
+            jax.random.PRNGKey(4), (512, 512), bk=128, bm=128,
+            p_zero_block=0.75, p_zero=0.0)
+        b_dense = sparse_format.from_ternary(t_dense, bk=128, bm=128)
+        b_half = sparse_format.from_ternary(t_half, bk=128, bm=128)
+        assert b_half.n_live < b_dense.n_live
+        assert b_half.nbytes() < b_dense.nbytes()
+
+    def test_occupancy_matches_blocks(self):
+        t = sparse_format.random_block_sparse_ternary(
+            jax.random.PRNGKey(5), (384, 256), bk=128, bm=128, p_zero_block=0.5)
+        bst = sparse_format.from_ternary(t, bk=128, bm=128)
+        occ = sparse_stats.block_occupancy(t, 128, 128)
+        np.testing.assert_allclose(np.asarray(bst.occupancy), occ, rtol=1e-6)
+        assert ((occ > 0) == (np.asarray(bst.block_map) >= 0)).all()
+
+    def test_strip_schedule_covers_live_blocks(self):
+        t = sparse_format.random_block_sparse_ternary(
+            jax.random.PRNGKey(6), (512, 384), bk=128, bm=128, p_zero_block=0.5)
+        bst = sparse_format.from_ternary(t, bk=128, bm=128)
+        kids, slots, counts, s_max = sparse_format.strip_schedule(bst)
+        bmap = np.asarray(bst.block_map)
+        assert int(np.asarray(counts).sum()) == bst.n_live
+        assert s_max == int((bmap >= 0).sum(axis=0).max())
+        for j in range(bmap.shape[1]):
+            c = int(np.asarray(counts)[j])
+            live_k = np.nonzero(bmap[:, j] >= 0)[0]
+            np.testing.assert_array_equal(np.asarray(kids)[j, :c], live_k)
+            np.testing.assert_array_equal(np.asarray(slots)[j, :c], bmap[live_k, j])
+
+
+class TestSparseKernel:
+    @pytest.mark.parametrize("p_zero", P_ZERO_SWEEP)
+    def test_exact_vs_dense_kernel_unstructured(self, p_zero):
+        """Acceptance: bit-identical (int32 accumulation) to tsar_matmul on
+        random ternary weights across the p_zero sweep."""
+        n, k, m = 4, 512, 384
+        t = _rand(int(p_zero * 100), k, m, p_zero=p_zero)
+        scale = jax.random.uniform(jax.random.PRNGKey(8), (m,), minval=0.25, maxval=2.0)
+        bst = sparse_format.from_ternary(t, scale, bk=128, bm=128)
+        x = jax.random.normal(jax.random.PRNGKey(9), (n, k))
+        got = ops.tsar_sparse_matmul(x, bst, interpret=True)
+        dense = ops.tsar_matmul(x, ternary.pack(t.astype(jnp.float32), scale),
+                                interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+    @pytest.mark.parametrize("p_zero_block", [0.0, 0.5, 1.0])
+    def test_exact_vs_ref_block_structured(self, p_zero_block):
+        n, k, m = 3, 640, 256
+        t = sparse_format.random_block_sparse_ternary(
+            jax.random.PRNGKey(10), (k, m), bk=128, bm=128,
+            p_zero_block=p_zero_block)
+        bst = sparse_format.from_ternary(t, bk=128, bm=128)
+        x = jax.random.normal(jax.random.PRNGKey(11), (n, k))
+        got = ops.tsar_sparse_matmul(x, bst, interpret=True)
+        want = ref.block_sparse_matmul_ref(x, bst)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ragged_shapes_and_leading_dims(self):
+        t = _rand(12, 300, 200)
+        bst = sparse_format.from_ternary(t, bk=128, bm=128)
+        x = jax.random.normal(jax.random.PRNGKey(13), (2, 3, 300))
+        got = ops.tsar_sparse_matmul(x, bst, interpret=True)
+        assert got.shape == (2, 3, 200)
+        want = ref.block_sparse_matmul_ref(x.reshape(6, 300), bst).reshape(2, 3, 200)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10**6), n=st.integers(1, 6),
+           pz=st.sampled_from(P_ZERO_SWEEP))
+    def test_property_exactness(self, seed, n, pz):
+        k, m = 256, 256
+        t = sparse_format.random_block_sparse_ternary(
+            jax.random.PRNGKey(seed), (k, m), bk=128, bm=128, p_zero_block=pz)
+        scale = jax.random.uniform(jax.random.PRNGKey(seed + 1), (m,),
+                                   minval=0.25, maxval=2.0)
+        bst = sparse_format.from_ternary(t, scale, bk=128, bm=128)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 2), (n, k))
+        got = ops.tsar_sparse_matmul(x, bst, interpret=True)
+        dense = ops.tsar_matmul(x, ternary.pack(t.astype(jnp.float32), scale),
+                                interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+class TestDensityDispatch:
+    @pytest.mark.parametrize("n,k,m", [(1, 2560, 6912), (128, 2560, 6912),
+                                       (8, 4096, 4096)])
+    def test_break_even_is_respected(self, n, k, m):
+        """Acceptance: sparse below the analytic break-even, never above."""
+        be = dataflow.sparse_break_even(n, k, m)
+        assert 0.0 < be < 1.0
+        below = dataflow.select_kernel(n, k, m, block_density=be * 0.9)
+        above = dataflow.select_kernel(n, k, m,
+                                       block_density=min(1.0, be * 1.1))
+        at_full = dataflow.select_kernel(n, k, m, block_density=1.0)
+        assert below.kernel == "tsar_sparse"
+        assert above.kernel != "tsar_sparse"
+        assert at_full.kernel != "tsar_sparse"
+
+    def test_default_density_never_speculates_sparse(self):
+        """Unstructured zeros leave every block live, so with no measured
+        block density the selector must never pick the sparse path."""
+        for (n, k, m) in [(1, 2560, 6912), (64, 1024, 1024), (128, 8192, 8192)]:
+            assert dataflow.select_kernel(n, k, m).kernel != "tsar_sparse"
+
+    def test_sparse_cost_monotone_in_density(self):
+        costs = [max(*dataflow._tsar_sparse_cost(8, 4096, 4096, bd))
+                 for bd in (0.1, 0.4, 0.7, 1.0)]
+        assert costs == sorted(costs)
+
+    def test_frozen_auto_dispatch_picks_sparse_when_blocks_die(self):
+        """End-to-end threading: a checkpoint with structurally dead blocks is
+        served by tsar_sparse under kernel='auto' with no caller change."""
+        key = jax.random.PRNGKey(20)
+        k, m = 512, 512
+        w = jax.random.normal(key, (k, m)) * 0.1
+        mask = sparse_format.random_block_sparse_ternary(
+            jax.random.PRNGKey(21), (k, m), bk=256, bm=256,
+            p_zero_block=0.75, p_zero=0.0).astype(jnp.float32)
+        fz = bitlinear.freeze({"w": w * jnp.abs(mask)})
+        assert fz.block_density is not None and fz.block_density < 0.5
+        x = jax.random.normal(jax.random.PRNGKey(22), (4, k))
+        choice = dataflow.select_kernel(
+            n=4, k=k, m=m, c=fz.c, density=fz.density,
+            block_density=fz.block_density, block_shape=fz.sparse.block_shape)
+        assert choice.kernel == "tsar_sparse"
+        y_auto = bitlinear.apply_frozen(fz, x, kernel="auto")
+        y_dense = bitlinear.apply_frozen(fz, x, kernel="tsar_mxu")
+        np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_frozen_without_sidecar_falls_back(self):
+        fz = bitlinear.freeze(bitlinear.init(jax.random.PRNGKey(0), 128, 64))
+        fz = fz._replace(sparse=None, block_density=0.01)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 128))
+        y = bitlinear.apply_frozen(fz, x, kernel="auto")   # must not raise
+        assert y.shape == (2, 64)
+
+
+class TestStats:
+    def test_profile_packed_tree(self):
+        from repro.models import layers
+        w1 = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * 0.1
+        w_stack = jax.random.normal(jax.random.PRNGKey(1), (3, 256, 128)) * 0.1
+        tree = {"attn": layers.pack_linear({"w": w1}),
+                "mlp": jax.vmap(layers.pack_linear)({"w": w_stack}),
+                "embed": {"wd": jnp.zeros((10, 4))}}
+        prof = sparse_stats.profile_params(tree)
+        assert {p["path"] for p in prof} == {"attn", "mlp"}
+        kb_one = -(-256 // sparse_format.DEFAULT_BK)   # blocks along K per layer
+        mb_one = -(-128 // sparse_format.DEFAULT_BM)
+        expect_blocks = {"attn": kb_one * mb_one, "mlp": 3 * kb_one * mb_one}
+        for p in prof:
+            assert 0.0 < p["density"] < 1.0
+            assert int(p["hist"].sum()) == expect_blocks[p["path"]]
+        summ = sparse_stats.summarize(prof)
+        assert summ["layers"] == 2
+        assert 0.0 < summ["density_mean"] < 1.0
+        assert len(sparse_stats.format_report(prof).splitlines()) == 4
+
+    def test_density_leaf_measures_zeros(self):
+        from repro.models import layers
+        packed = layers.pack_linear({"w": jax.random.normal(jax.random.PRNGKey(2), (256, 128))})
+        assert "density" in packed
+        d = float(packed["density"])
+        assert 0.4 < d < 0.95   # absmean keeps roughly 2/3 nonzero
+
+    def test_block_occupancy_ragged(self):
+        t = np.zeros((200, 100), np.int8)
+        t[:128, :64] = 1
+        occ = sparse_stats.block_occupancy(t, 128, 128)
+        assert occ.shape == (2, 1)
+        assert occ[0, 0] == pytest.approx(64 * 128 / (128 * 128))
+        assert occ[1, 0] == 0.0

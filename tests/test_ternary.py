@@ -92,6 +92,61 @@ class TestActivationQuant:
         assert (err <= np.asarray(scale) * 0.51 + 1e-6).all()
 
 
+class TestRaggedPacking:
+    """Edge cases: K not a multiple of the bit-pack width (8) or LUT block (c).
+
+    Ragged tails are zero-padded at pack time; the unpackers slice them off,
+    so round-trips are exact at any K.
+    """
+
+    @pytest.mark.parametrize("k", [1, 3, 7, 9, 13, 127, 133])
+    def test_pack_unpack_ragged_k(self, k):
+        t = _rand_ternary(k, k, 12)
+        tw = ternary.pack(t.astype(jnp.float32))
+        assert tw.sign_plane.shape[0] == -(-k // ternary.PACK)
+        assert ternary.unpack(tw).shape == (k, 12)
+        np.testing.assert_array_equal(np.asarray(ternary.unpack(tw)), np.asarray(t))
+
+    @pytest.mark.parametrize("k,c", [(10, 4), (7, 2), (65, 8), (130, 4), (5, 3)])
+    def test_pack_indices_roundtrip_ragged_k(self, k, c):
+        t = _rand_ternary(k * 7 + c, k, 9)
+        ip, iz = ternary.pack_indices(t, c)
+        assert ip.shape == (-(-k // c), 9)
+        back = ternary.unpack_indices(ip, iz, c, k)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(t))
+
+    @pytest.mark.parametrize("k,c", [(64, 4), (128, 2), (48, 8)])
+    def test_pack_indices_roundtrip_aligned(self, k, c):
+        t = _rand_ternary(k + c, k, 16)
+        ip, iz = ternary.pack_indices(t, c)
+        back = ternary.unpack_indices(ip, iz, c)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(t))
+
+    def test_ragged_pad_bits_are_marked_zero_in_indices(self):
+        """pack_indices pads with idx_s bits so the LUT identity contributes
+        exactly 0 per pad position."""
+        t = jnp.ones((5, 3), jnp.int8)
+        ip, iz = ternary.pack_indices(t, 4)
+        # last block: rows 4..7 -> row 4 live (+1), rows 5..7 padded zeros
+        assert int(ip[1, 0]) == 0b0001
+        assert int(iz[1, 0]) == 0b1110
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 200),
+           m=st.integers(1, 16))
+    def test_roundtrip_property_any_k(self, seed, k, m):
+        t = _rand_ternary(seed, k, m)
+        tw = ternary.pack(t.astype(jnp.float32))
+        np.testing.assert_array_equal(np.asarray(ternary.unpack(tw)), np.asarray(t))
+
+    def test_zero_plane_density(self):
+        t = _rand_ternary(42, 133, 10)
+        tw = ternary.pack(t.astype(jnp.float32))
+        want = float(np.count_nonzero(np.asarray(t))) / t.size
+        got = float(ternary.zero_plane_density(tw.zero_plane, 133))
+        assert got == pytest.approx(want)
+
+
 class TestLUTIndices:
     @pytest.mark.parametrize("c", [2, 4, 8])
     def test_index_encoding_bounds(self, c):
