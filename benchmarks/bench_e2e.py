@@ -151,14 +151,23 @@ def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False):
                                 policy=policy)
             reqs = eng.run(mk())
             lat = eng.latency_stats(reqs)
+            # The decode-bucket kernel the compiled execution plan committed
+            # to (qat engines carry no plan): the CI smoke step asserts this
+            # column exists so the plan path can't silently fall out of the
+            # serving benchmark.  Pure-decode steps run (slots, 1) tokens, so
+            # the bucket the serving loop actually dispatches is n=slots.
+            plan_kernel = (eng.plan.dominant_kernel(slots)
+                           if eng.plan is not None else "none")
             name = f"serve_{arch}_{policy}_{'packed' if packed else 'qat'}"
             csv_row(name, lat["ttft_mean_s"] * 1e6,
                     f"ttft_max_ms={lat['ttft_max_s'] * 1e3:.1f};"
                     f"tpot_ms={lat['tpot_mean_s'] * 1e3:.2f};"
                     f"decode_tok_s={eng.throughput():.1f};"
                     f"max_step_tokens={eng.max_step_tokens()};"
-                    f"peak_kv_blocks={eng.stats['peak_kv_blocks']}")
+                    f"peak_kv_blocks={eng.stats['peak_kv_blocks']};"
+                    f"plan_kernel={plan_kernel}")
             rows.append({"policy": policy, "packed": packed, **lat,
+                         "plan_kernel": plan_kernel,
                          "decode_tok_s": eng.throughput(),
                          "max_step_tokens": eng.max_step_tokens()})
     return rows

@@ -27,6 +27,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import bench_e2e, bench_energy, bench_kernels, bench_memory, bench_scaling
 
+    def check_serving(rows):
+        # Smoke-level contract: serving rows must carry the execution plan's
+        # kernel choice, so a regression that drops the plan path out of the
+        # engine fails CI loudly instead of rotting silently.
+        assert rows, "run_serving produced no rows"
+        missing = [r for r in rows if "plan_kernel" not in r]
+        assert not missing, f"serving rows missing plan_kernel: {missing}"
+        return rows
+
     suites = {
         "memory": lambda: bench_memory.run(quick=args.quick),
         # 7B+ excluded by default: the memory-LUT *baseline* needs ~6 GB/gather
@@ -37,7 +46,7 @@ def main() -> None:
         "scaling": lambda: bench_scaling.run(quick=args.quick),
         "energy": lambda: bench_energy.run(quick=args.quick),
         "kernels": lambda: bench_kernels.run(quick=args.quick),
-        "serving": lambda: bench_e2e.run_serving(quick=args.quick),
+        "serving": lambda: check_serving(bench_e2e.run_serving(quick=args.quick)),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -18,7 +18,7 @@ import numpy as np
 import jax
 
 import repro.configs as configs
-from repro.core.dataflow import layer_plan
+from repro.plan import format_plan
 from repro.models import model_zoo as zoo
 from repro.serving import Request, ServingEngine
 
@@ -38,21 +38,6 @@ def main():
     cfg = configs.get(args.arch).reduced()
     params = zoo.init_params(cfg, jax.random.PRNGKey(0))
 
-    # Compile-time kernel plan (paper Sec. III-D): per-layer AP/OP choice.
-    d, f = cfg.d_model, cfg.d_ff or cfg.d_model
-    plan = layer_plan({
-        "attn_qkv (decode)": (1, d, 3 * d),
-        "attn_out (decode)": (1, d, d),
-        "mlp_up   (decode)": (1, d, f),
-        "mlp_down (decode)": (1, f, d),
-        "attn_qkv (prefill)": (128, d, 3 * d),
-        "mlp_up   (prefill)": (128, d, f),
-    })
-    print("kernel plan (per-layer, compile time):")
-    for name, choice in plan.items():
-        print(f"  {name:22s} -> {choice.kernel:9s} {choice.dataflow}  "
-              f"bound={choice.bound}")
-
     # Mixed prompt lengths: short chats next to prompts spanning many chunks.
     rng = np.random.default_rng(0)
     lens = [6 + i % 5 if i % 3 else 3 * args.prefill_chunk + i for i in range(args.requests)]
@@ -62,6 +47,12 @@ def main():
     engine = ServingEngine(cfg, params, max_len=max_len, batch_slots=args.slots,
                            packed=not args.no_packed,
                            prefill_chunk=args.prefill_chunk, policy=args.policy)
+    if engine.plan is not None:
+        # Compile-once kernel plan (paper Sec. III-D / Fig. 5): the engine
+        # costed every registered kernel per layer per n-bucket at init;
+        # the jitted steps below just execute this table.
+        print("execution plan (compiled once at engine init):")
+        print(format_plan(engine.plan, max_rows=12))
     if engine.density is not None:
         print(f"weight density (measured): mean {engine.density['density_mean']:.3f} "
               f"min {engine.density['density_min']:.3f} | "

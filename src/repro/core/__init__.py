@@ -1,4 +1,5 @@
 """Core T-SAR algorithmic layer: ternary quantization, LUT algorithms,
 BitLinear, shared hardware constants, and the adaptive AP/OP dataflow
-selector (now density-aware — see ``repro.sparse``)."""
+selector (density-aware — see ``repro.sparse``; kernel costs and lowerings
+live on the ``repro.plan.registry`` implementations)."""
 from repro.core import bitlinear, dataflow, hw, lut, ternary  # noqa: F401

@@ -13,13 +13,14 @@ Two operating modes:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import lut, ternary
-from repro.core.dataflow import select_kernel
+from repro.plan import registry
 
 # Default LUT block size: c=4 -> 16-entry shared binary LUT, the sweet spot
 # for the TGEMV_16x16 configuration in the paper's Fig. 6 examples.
@@ -148,73 +149,88 @@ def apply_eval(params: dict, x: jax.Array) -> jax.Array:
     return lut.bitlinear_matmul_exact_int(x, t, scale).astype(x.dtype)
 
 
-def apply_frozen(
-    frozen: FrozenBitLinear,
-    x: jax.Array,
-    kernel: str = "auto",
-    use_pallas: bool = False,
-) -> jax.Array:
-    """Inference forward with kernel dispatch.
+# Sentinel distinguishing "caller passed nothing" from explicit values in the
+# deprecated apply_frozen(kernel=..., use_pallas=...) signature.
+_UNSET = object()
 
-    kernel: 'auto' | 'tsar_lut' | 'tsar_mxu' | 'tsar_sparse' | 'memory_lut'
-    | 'dense'.  'auto' feeds the layer's *measured* density / block occupancy
-    (stamped by :func:`freeze`) into the cost model, so a checkpoint with
-    structurally dead blocks is served by the zero-skipping kernel without
-    any caller change.
+
+def resolve_kernel(frozen: FrozenBitLinear, n: int, plan=None) -> str:
+    """Resolve a plan spec to a registered kernel name for one layer.
+
+    ``plan`` is a kernel name, a ``repro.plan.LayerPlan``, ``'auto'``, or
+    None (auto).  Auto feeds the layer's *measured* density / block occupancy
+    (stamped by :func:`freeze`) into the registry cost models, so a
+    checkpoint with structurally dead blocks is served by the zero-skipping
+    kernel without any caller change.  A planned/auto ``tsar_sparse`` on a
+    layer frozen without a sidecar (e.g. a saved plan applied to a model
+    re-frozen under tracing, where compaction is skipped) degrades to
+    ``tsar_mxu`` — same math; only an *explicit* ``plan='tsar_sparse'``
+    string still raises.
     """
-    k, m = frozen.shape
-    n = 1
-    for d in x.shape[:-1]:   # static shape math — keeps apply_frozen jittable
-        n *= d
-    if kernel == "auto":
+    if plan is None or plan == "auto":
+        from repro.core.dataflow import select_kernel
+
+        k, m = frozen.shape
         kw = {}
         if frozen.density is not None:
             kw["density"] = frozen.density
         if frozen.block_density is not None and frozen.sparse is not None:
             kw["block_density"] = frozen.block_density
             kw["block_shape"] = frozen.sparse.block_shape
-        kernel = select_kernel(n=n, k=k, m=m, c=frozen.c, **kw).kernel
-        if kernel == "tsar_sparse" and frozen.sparse is None:
-            kernel = "tsar_mxu"
+        name = select_kernel(n=n, k=k, m=m, c=frozen.c, **kw).kernel
+    elif isinstance(plan, str):
+        name = plan
+    else:                        # LayerPlan (or anything with .kernel)
+        name = plan.kernel
+    explicit = isinstance(plan, str) and plan != "auto"
+    if name == "tsar_sparse" and not explicit \
+            and not registry.get(name).supports(frozen):
+        name = "tsar_mxu"
+    return name
 
-    x32 = x.astype(jnp.float32)
-    w_scale = frozen.packed.scale
 
-    if kernel == "tsar_sparse":
-        if frozen.sparse is None:
-            raise ValueError("layer was frozen without a block-sparse sidecar")
-        if use_pallas:
-            from repro.kernels import ops
+def apply_frozen(
+    frozen: FrozenBitLinear,
+    x: jax.Array,
+    kernel=_UNSET,
+    use_pallas=_UNSET,
+    *,
+    plan=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Inference forward through the kernel registry.
 
-            y = ops.tsar_sparse_matmul(x32, frozen.sparse)
-        else:
-            # Traceable jnp fallback: identical math to the sparse kernel
-            # (the planes decode to the same ternary matrix, and skipped
-            # blocks contribute exact int32 zeros either way).  The zero-skip
-            # advantage itself only materializes in the Pallas kernel.
-            a_q, a_scale = ternary.quantize_activations(x32)
-            t = ternary.unpack(frozen.packed)
-            y = lut.dense_int8_matmul(a_q, a_scale, t, w_scale)
-    elif kernel == "tsar_lut":
-        y = lut.tsar_lut_matmul(x32, frozen.idx_pos, frozen.idx_zero, frozen.c, w_scale)
-    elif kernel == "tsar_mxu":
-        if use_pallas:
-            from repro.kernels import ops
+    ``plan`` — a kernel name (``registry.names()``), a ``repro.plan.LayerPlan``
+    (e.g. ``model_plan.lookup(layer, n)``), or None/'auto' to cost-select
+    from the layer's measured density.  The chosen implementation's
+    ``lower()`` runs the math; whether it binds the Pallas kernel auto-resolves
+    from the backend (TPU -> Pallas, else the traceable jnp spelling), and
+    ``interpret`` forces Pallas interpret mode for validation.
 
-            y = ops.tsar_matmul(x32, frozen.packed)
-        else:
-            a_q, a_scale = ternary.quantize_activations(x32)
-            t = ternary.unpack(frozen.packed)
-            y = lut.dense_int8_matmul(a_q, a_scale, t, w_scale)
-    elif kernel == "memory_lut":
-        t = ternary.unpack(frozen.packed)
-        li = lut.ternary_lut_indices(t, frozen.c)
-        y = lut.memory_lut_matmul(x32, li, frozen.c, w_scale)
-    elif kernel == "dense":
-        w = ternary.unpack_dequant(frozen.packed)
-        y = lut.dense_matmul(x32, w)
-    else:
-        raise ValueError(f"unknown kernel {kernel!r}")
+    ``kernel=``/``use_pallas=`` are the deprecated string-dispatch spelling:
+    still honored (``use_pallas=None`` now auto-resolves instead of silently
+    skipping Pallas on TPU), but emitting ``DeprecationWarning``.
+    """
+    up = None
+    if kernel is not _UNSET or use_pallas is not _UNSET:
+        warnings.warn(
+            "repro.core.bitlinear.apply_frozen: the kernel=/use_pallas= "
+            "signature is deprecated; pass plan= (a kernel name or a "
+            "repro.plan.LayerPlan) and interpret= instead — see docs/plan.md",
+            DeprecationWarning, stacklevel=2)
+        if kernel is not _UNSET and plan is None:
+            plan = kernel
+        if use_pallas is not _UNSET:
+            up = use_pallas
+    n = 1
+    for d in x.shape[:-1]:   # static shape math — keeps apply_frozen jittable
+        n *= d
+    name = resolve_kernel(frozen, n, plan)
+    # A LayerPlan carries more than the kernel name: its dataflow + tile
+    # sizes are executed by the Pallas-bound lowerings (grid order, tiling).
+    lp = plan if (plan is not None and not isinstance(plan, str)) else None
+    y = registry.get(name).lower(frozen, x, use_pallas=up,
+                                 interpret=interpret, lp=lp)
     return y.astype(x.dtype)
 
 

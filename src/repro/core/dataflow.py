@@ -11,18 +11,16 @@ The paper ships two microkernel dataflows and picks per layer at compile time:
   high-M GEMV/decode.
 
 On TPU the same knob is the Pallas grid iteration order + which operand's
-BlockSpec is pinned across the inner grid dimension.  The cost model below is
-an analytic bytes/FLOPs estimate against the v5e roofline constants; it also
-chooses *which* kernel family to run (in-VMEM LUT vs decode-to-MXU vs the
-zero-block-skipping sparse pool), since on TPU the MXU path dominates once N
-is large enough to fill a matmul tile, and the sparse path wins once enough
-whole blocks are dead.
+BlockSpec is pinned across the inner grid dimension.
 
-Density is an explicit input: the seed model implicitly assumed the uniform
-~1/3-zeros BitNet prior for every layer; ``select_kernel`` now takes the
-*measured* nonzero fraction (``density``) and live-block fraction
-(``block_density``, e.g. ``BlockSparseTernary.block_density``) so the
-per-layer choice tracks the checkpoint actually being served.
+Since the execution-plan redesign, the per-kernel cost models live on the
+kernel implementations themselves (``repro.plan.registry`` — each
+:class:`KernelImpl` carries ``cost(n, k, m, c, density, block_density)``);
+:func:`select_kernel` is the argmin over the registry's selectable costs, and
+:func:`layer_plan` is a thin wrapper over
+``repro.plan.plan.compile_plan_from_shapes`` kept for compatibility.  The
+durable, whole-model version of this choice is
+``repro.plan.compile_plan`` -> ``ModelPlan``.
 """
 from __future__ import annotations
 
@@ -35,23 +33,12 @@ from repro.core.hw import (  # noqa: F401  (re-exported for back-compat)
     PEAK_FLOPS_INT8,
     VMEM_BYTES,
 )
-
-# The BitNet-b1.58 prior: absmean ternarization zeroes ~1/3 of the weights.
-# Used when no measured density is supplied.
-DEFAULT_DENSITY = 2.0 / 3.0
-
-# Canonical block-sparse tiling default; sparse/format re-exports it as
-# DEFAULT_BLOCK_SHAPE (defined here, the import-graph root, to avoid a
-# core <-> sparse cycle).
-SPARSE_BLOCK = (256, 256)
-
-# Issue-efficiency tax on the sparse kernel's live-block work: the
-# scalar-prefetched gather walks the pool non-sequentially (no streaming
-# prefetch), and strips with fewer live blocks than the grid's s_max still
-# burn masked steps.  Charged on compute and the weight stream, it puts the
-# analytic break-even near 1/1.1 ~ 0.9 live blocks instead of degenerately
-# at 1.0.
-SPARSE_ISSUE_TAX = 1.1
+from repro.plan import registry as _registry
+from repro.plan.registry import (  # noqa: F401  (canonical home is the registry)
+    DEFAULT_DENSITY,
+    SPARSE_BLOCK,
+    SPARSE_ISSUE_TAX,
+)
 
 
 @dataclass(frozen=True)
@@ -63,61 +50,21 @@ class KernelChoice:
     detail: dict
 
 
+# Back-compat aliases: the cost models moved behind the registry impls'
+# ``cost()`` methods; these keep the old private names callable.
+
 def _tsar_mxu_cost(n: int, k: int, m: int) -> tuple[float, float]:
-    """(compute_s, memory_s) for the decode-to-MXU kernel."""
-    flops = 2.0 * n * k * m                      # int8 MACs on the MXU
-    decode_ops = k * m * 4.0                     # bitplane unpack ALU ops
-    compute = flops / PEAK_FLOPS_INT8 + decode_ops / (PEAK_FLOPS_INT8 / 2)
-    bytes_moved = (
-        k * m * 0.25                             # 2-bit packed weights
-        + n * k * 1.0                            # int8 activations
-        + n * m * 2.0                            # bf16 outputs
-        + m * 4.0                                # scales
-    )
-    return compute, bytes_moved / HBM_BW
+    return _registry.get("tsar_mxu").cost(n, k, m)
 
 
 def _tsar_lut_cost(n: int, k: int, m: int, c: int) -> tuple[float, float]:
-    """(compute_s, memory_s) for the in-VMEM shared-LUT kernel."""
-    blocks = k / c
-    lut_build = n * blocks * (2 ** c) * 1.0      # TLUT expansion ops
-    # Each gather lowered as one-hot x LUT: 2^c MACs per (block, m) pair, two
-    # gathers per block (pos/zero) fused into one 2^c-wide matmul.
-    gather = 2.0 * n * blocks * m * (2 ** c) / 8.0
-    compute = (lut_build + gather) / PEAK_FLOPS_INT8
-    bytes_moved = (
-        2.0 * (k / c) * m * 1.0                  # idx_pos + idx_zero, 1B each
-        + n * k * 1.0
-        + n * m * 2.0
-        + m * 4.0
-    )
-    return compute, bytes_moved / HBM_BW
+    return _registry.get("tsar_lut").cost(n, k, m, c)
 
 
 def _tsar_sparse_cost(n: int, k: int, m: int, block_density: float,
                       block_shape: tuple = SPARSE_BLOCK) -> tuple[float, float]:
-    """(compute_s, memory_s) for the zero-block-skipping kernel.
-
-    MXU work and weight bytes scale with the LIVE-block fraction; the index
-    map (int32 per block) and per-strip gather lists are the sparsity tax,
-    which is why the dense kernel wins at block_density ~ 1.
-    """
-    bk, bm = block_shape
-    kb, mb = max(k / bk, 1.0), max(m / bm, 1.0)
-    live = block_density * kb * mb
-    flops = 2.0 * n * bk * bm * live             # int8 MACs, live blocks only
-    decode_ops = bk * bm * live * 4.0            # bitplane unpack, live only
-    compute = SPARSE_ISSUE_TAX * (
-        flops / PEAK_FLOPS_INT8 + decode_ops / (PEAK_FLOPS_INT8 / 2))
-    bytes_moved = (
-        SPARSE_ISSUE_TAX * live * bk * bm * 0.25  # 2-bit planes, live blocks
-        + kb * mb * 4.0                          # block-index map (int32)
-        + 2.0 * live * 4.0                       # kids+slots gather lists
-        + n * k * 1.0                            # int8 activations
-        + n * m * 2.0                            # bf16 outputs
-        + m * 4.0                                # scales
-    )
-    return compute, bytes_moved / HBM_BW
+    return _registry.get("tsar_sparse").cost(
+        n, k, m, block_density=block_density, block_shape=block_shape)
 
 
 def select_kernel(n: int, k: int, m: int, c: int = 4,
@@ -125,7 +72,8 @@ def select_kernel(n: int, k: int, m: int, c: int = 4,
                   block_density: float | None = None,
                   block_shape: tuple = SPARSE_BLOCK) -> KernelChoice:
     """Compile-time per-layer selection (paper: 'empirically selects the
-    fastest kernel for each layer'); here an analytic roofline pick.
+    fastest kernel for each layer'); an analytic roofline argmin over the
+    registry's selectable kernels.
 
     ``density`` is the measured nonzero-weight fraction (defaults to the
     BitNet ~2/3 prior); ``block_density`` the measured live-block fraction at
@@ -133,26 +81,24 @@ def select_kernel(n: int, k: int, m: int, c: int = 4,
     from ``density`` assuming unstructured zeros — which makes essentially
     every block live (``1 - (1-d)^(bk*bm) ~ 1``), so the sparse path is only
     chosen on *measured* structured sparsity, never speculatively.
+
+    Serve-path note: this runs at PLAN time only.  The serving engine calls
+    it (via ``repro.plan.compile_plan``) once at init; the jitted step then
+    dispatches through the frozen ``ModelPlan``.
     """
-    mxu_c, mxu_m = _tsar_mxu_cost(n, k, m)
-    lut_c, lut_m = _tsar_lut_cost(n, k, m, c)
     if block_density is None:
-        bk, bm = block_shape
-        block_density = 1.0 - (1.0 - min(density, 1.0 - 1e-12)) ** (bk * bm)
-    sp_c, sp_m = _tsar_sparse_cost(n, k, m, block_density, block_shape)
-    cands = {
-        "tsar_mxu": max(mxu_c, mxu_m),
-        "tsar_lut": max(lut_c, lut_m),
-        "tsar_sparse": max(sp_c, sp_m),
-    }
+        block_density = _registry.estimate_block_density(density, block_shape)
+    costs = _registry.candidate_costs(n, k, m, c, density=density,
+                                     block_density=block_density,
+                                     block_shape=block_shape)
+    cands = {name: max(comp, mem) for name, (comp, mem) in costs.items()}
     # Strict improvement required: at/above break-even the dense paths win
     # (no format conversion for a wash).
     dense_cands = {kn: v for kn, v in cands.items() if kn != "tsar_sparse"}
     kernel = min(dense_cands, key=dense_cands.get)
-    if cands["tsar_sparse"] < dense_cands[kernel]:
+    if cands.get("tsar_sparse", float("inf")) < dense_cands[kernel]:
         kernel = "tsar_sparse"
-    comp, mem = {"tsar_mxu": (mxu_c, mxu_m), "tsar_lut": (lut_c, lut_m),
-                 "tsar_sparse": (sp_c, sp_m)}[kernel]
+    comp, mem = costs[kernel]
     dataflow = select_dataflow(n, k, m, c)
     return KernelChoice(
         kernel=kernel,
@@ -172,12 +118,13 @@ def sparse_break_even(n: int, k: int, m: int, c: int = 4,
     dense costs are constant, so the crossover is unique; found by bisection
     to stay consistent with :func:`select_kernel` exactly.
     """
-    mxu_c, mxu_m = _tsar_mxu_cost(n, k, m)
-    lut_c, lut_m = _tsar_lut_cost(n, k, m, c)
-    best_dense = min(max(mxu_c, mxu_m), max(lut_c, lut_m))
+    best_dense = min(
+        max(*_registry.get(name).cost(n, k, m, c))
+        for name in _registry.selectable_names() if name != "tsar_sparse")
+    sp = _registry.get("tsar_sparse")
 
     def sparse(bd: float) -> float:
-        sc, sm = _tsar_sparse_cost(n, k, m, bd, block_shape)
+        sc, sm = sp.cost(n, k, m, c, block_density=bd, block_shape=block_shape)
         return max(sc, sm)
 
     if sparse(1.0) < best_dense:
@@ -217,7 +164,25 @@ def select_dataflow(n: int, k: int, m: int, c: int = 4,
     return "AP" if n * k >= m else "OP"
 
 
-def layer_plan(shapes: dict[str, tuple[int, int, int]], c: int = 4) -> dict[str, KernelChoice]:
-    """Whole-model compile-time plan: layer name -> choice.  Logged by the
-    serving engine and train driver so the per-layer adaptivity is visible."""
-    return {name: select_kernel(n, k, m, c) for name, (n, k, m) in shapes.items()}
+def layer_plan(shapes: dict, c: int = 4) -> dict[str, KernelChoice]:
+    """Whole-model compile-time plan: layer name -> choice.
+
+    Thin compatibility wrapper over ``repro.plan.compile_plan_from_shapes``.
+    Specs may be ``(n, k, m)``, ``(n, k, m, c)``, or dicts with optional
+    per-layer ``c`` / ``density`` / ``block_density`` — so e.g. MoE expert
+    layers with a different LUT block size or measured density cost
+    correctly.  Prefer ``repro.plan.compile_plan`` for a durable, savable
+    ModelPlan.
+    """
+    from repro.plan.plan import compile_plan_from_shapes
+
+    mp = compile_plan_from_shapes(shapes, c=c)
+    out: dict[str, KernelChoice] = {}
+    for name, by_bucket in mp.layers.items():
+        ((n, lp),) = by_bucket.items()
+        out[name] = KernelChoice(
+            kernel=lp.kernel, dataflow=lp.dataflow, est_time_s=lp.est_time_s,
+            bound=lp.bound,
+            detail={"density": lp.density, "tile_sizes": lp.tile_sizes,
+                    "bucket": n})
+    return out

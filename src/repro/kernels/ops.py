@@ -37,6 +37,35 @@ def _tile(n: int, pref: int, align: int) -> int:
     return max(align, ((n + align - 1) // align) * align)
 
 
+# ---------------------------------------------------------------------------
+# Shared prologue/epilogue: every public wrapper flattens leading dims to one
+# row axis, (maybe) quantizes + pads to tile multiples, and finally slices the
+# padding off and restores the leading dims.
+# ---------------------------------------------------------------------------
+
+def _flatten_lead(x: jax.Array) -> tuple[jax.Array, tuple, int]:
+    """(..., K) -> ((N, K) float32, lead_shape, N)."""
+    lead = x.shape[:-1]
+    n = 1
+    for d in lead:
+        n *= d
+    return x.reshape((n, x.shape[-1])).astype(jnp.float32), lead, n
+
+
+def _quantize_padded(x2: jax.Array, bn: int, k_mult: int) -> tuple[jax.Array, jax.Array]:
+    """Per-token int8 quantization, rows padded to ``bn`` and the channel
+    axis zero-padded to ``k_mult`` (zero rows/columns contribute nothing)."""
+    a_q, a_scale = ternary.quantize_activations(x2)
+    a_q = _pad_to(_pad_to(a_q, 0, bn), 1, k_mult)
+    a_scale = _pad_to(a_scale, 0, bn)
+    return a_q, a_scale
+
+
+def _unflatten_lead(y: jax.Array, lead: tuple, n: int, m: int) -> jax.Array:
+    """(N_padded, M_padded) -> (..., M): slice padding, restore lead dims."""
+    return y[:n, :m].reshape(lead + (m,))
+
+
 def tsar_matmul(
     x: jax.Array,
     tw: ternary.TernaryWeights,
@@ -55,20 +84,13 @@ def tsar_matmul(
     if interpret is None:
         interpret = _auto_interpret()
     k, m = tw.shape
-    lead = x.shape[:-1]
-    n = 1
-    for d in lead:
-        n *= d
-    x2 = x.reshape(n, k).astype(jnp.float32)
-
-    a_q, a_scale = ternary.quantize_activations(x2)
+    x2, lead, n = _flatten_lead(x)
 
     bn_ = _tile(n, bn, 8)
     bk_ = _tile(k, bk, 128)   # keeps plane tile rows (bk//8) a sublane multiple
     bm_ = _tile(m, bm, 128)
 
-    a_q = _pad_to(_pad_to(a_q, 0, bn_), 1, bk_)
-    a_scale = _pad_to(a_scale, 0, bn_)
+    a_q, a_scale = _quantize_padded(x2, bn_, bk_)
     # Padded K rows decode to sign=0,zero=0 => weight +1, but the matching
     # activation rows are zero-padded so they contribute nothing.  Padded M
     # columns are sliced off below.
@@ -80,7 +102,7 @@ def tsar_matmul(
         a_q, a_scale, sign, zero, wsc,
         bn=bn_, bk=bk_, bm=bm_, dataflow=dataflow, interpret=interpret,
     )
-    return y[:n, :m].reshape(lead + (m,))
+    return _unflatten_lead(y, lead, n, m)
 
 
 def tsar_sparse_matmul(
@@ -105,19 +127,12 @@ def tsar_sparse_matmul(
     k, m = bst.shape
     bk, bm = bst.block_shape
     kb, mb = bst.grid
-    lead = x.shape[:-1]
-    n = 1
-    for d in lead:
-        n *= d
-    x2 = x.reshape(n, k).astype(jnp.float32)
-
-    a_q, a_scale = ternary.quantize_activations(x2)
+    x2, lead, n = _flatten_lead(x)
 
     bn_ = _tile(n, bn, 8)
     # Pad activations to the format's padded K (pad columns hit zero-padded
     # weight tails inside edge blocks — or dead blocks — so they are exact).
-    a_q = _pad_to(_pad_to(a_q, 0, bn_), 1, kb * bk)
-    a_scale = _pad_to(a_scale, 0, bn_)
+    a_q, a_scale = _quantize_padded(x2, bn_, kb * bk)
     wsc = _pad_to(bst.scale, 0, mb * bm)
 
     kids, slots, counts, s_max = sparse_format.strip_schedule(bst)
@@ -126,7 +141,7 @@ def tsar_sparse_matmul(
         wsc.reshape(1, mb * bm),
         bn=bn_, bk=bk, bm=bm, s_steps=max(s_max, 1), interpret=interpret,
     )
-    return y[:n, :m].reshape(lead + (m,))
+    return _unflatten_lead(y, lead, n, m)
 
 
 def tsar_lut_gemv(
@@ -147,12 +162,7 @@ def tsar_lut_gemv(
     if interpret is None:
         interpret = _auto_interpret()
     blocks, m = idx_pos.shape
-    k = x.shape[-1]                 # true K; blocks*c >= k for ragged layers
-    lead = x.shape[:-1]
-    n = 1
-    for d in lead:
-        n *= d
-    x2 = x.reshape(n, k).astype(jnp.float32)
+    x2, lead, n = _flatten_lead(x)  # true K; blocks*c >= k for ragged layers
 
     bb_ = _tile(blocks, bb, 8)
     bm_ = _tile(m, bm, 128)
@@ -168,4 +178,4 @@ def tsar_lut_gemv(
     y = _lut_kernel.tsar_lut_gemv(
         x2, ip, iz, wsc, c=c, bb=bb_, bm=bm_, interpret=interpret
     )
-    return y[:, :m].reshape(lead + (m,))
+    return _unflatten_lead(y, lead, n, m)

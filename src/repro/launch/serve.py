@@ -6,12 +6,14 @@
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 import jax
 
 import repro.configs as configs
 from repro.models import model_zoo as zoo
+from repro.plan import ModelPlan, format_plan
 from repro.serving import Request, ServingEngine
 
 
@@ -25,14 +27,39 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--no-packed", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan-file", default=None, metavar="PATH",
+                    help="execution-plan JSON: loaded if it exists (skips "
+                         "re-costing), otherwise the compiled plan is saved "
+                         "there (compile-once/serve-many)")
+    ap.add_argument("--save-plan", default=None, metavar="PATH",
+                    help="also write the engine's plan JSON here after init")
+    ap.add_argument("--print-plan", action="store_true",
+                    help="print the per-layer, per-bucket plan table")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    plan = None
+    if args.plan_file and os.path.exists(args.plan_file):
+        plan = ModelPlan.load(args.plan_file)
+        print(f"plan: loaded {args.plan_file} ({len(plan.layers)} layers, "
+              f"buckets {list(plan.buckets)})")
     engine = ServingEngine(cfg, params, max_len=args.max_len,
-                           batch_slots=args.slots, packed=not args.no_packed)
+                           batch_slots=args.slots, packed=not args.no_packed,
+                           plan=plan)
+    if engine.plan is not None:
+        if plan is None and args.plan_file:
+            engine.plan.save(args.plan_file)
+            print(f"plan: compiled and saved to {args.plan_file}")
+        if args.save_plan:
+            engine.plan.save(args.save_plan)
+        s = engine.plan.summary()
+        print(f"plan: {s['layers']} layers | decode -> {s['decode_kernel']} | "
+              f"prefill -> {s['prefill_kernel']}")
+        if args.print_plan:
+            print(format_plan(engine.plan))
 
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,

@@ -46,7 +46,19 @@ def linear(p: dict, x: jax.Array, train: bool = True) -> jax.Array:
 
 
 def _packed_linear(p: dict, x: jax.Array) -> jax.Array:
-    """Inference forward from 2-bit planes.
+    """Inference forward from 2-bit planes, dispatched through the active
+    execution plan (``repro.plan.runtime``).
+
+    When a ``ModelPlan`` is active (the serving engine activates its plan
+    around every jitted step) the planned kernel for this layer's (k, m) at
+    the step's token count decides the realization — a trace-time constant
+    table lookup, never a ``select_kernel`` call.  Off-TPU every T-SAR kernel
+    family realizes as the same exact decode->int8-dot spelling below (the
+    Pallas grids differ on TPU, the integer math does not), so planned
+    ``tsar_mxu``/``tsar_lut``/``tsar_sparse`` are bit-identical here; the
+    baselines genuinely switch: planned ``dense`` runs the dequantized fp
+    matmul and planned ``memory_lut`` the DRAM-LUT gather (both via the
+    registry lowering), so A/B plans measure what their label says.
 
     The only weight bytes read are the two uint8 bitplanes (+ per-channel
     scales): this is what makes the serve-path HBM traffic 8x smaller than
@@ -54,7 +66,18 @@ def _packed_linear(p: dict, x: jax.Array) -> jax.Array:
     in the fused Pallas kernel (repro.kernels); this jnp spelling lowers to
     the identical decode->MXU dataflow and is SPMD-shardable.
     """
+    from repro.plan import runtime as plan_runtime
+
     k = x.shape[-1]
+    m = p["scale"].shape[-1]
+    n = 1
+    for d in x.shape[:-1]:   # static at trace time
+        n *= d
+    lp = plan_runtime.planned(k, m, n)
+    if lp is not None and lp.kernel in ("dense", "memory_lut"):
+        from repro.plan import registry
+
+        return registry.get(lp.kernel).lower(p, x)
     sign = _unpack_plane_nd(p["sign"], k)   # int8 {0,1}
     zero = _unpack_plane_nd(p["zero"], k)
     t = ((1 - 2 * sign) * (1 - zero)).astype(jnp.int8)
@@ -74,7 +97,7 @@ def _unpack_plane_nd(plane: jax.Array, k: int) -> jax.Array:
     return bits.reshape((kp,) + plane.shape[1:])[:k].astype(jnp.int8)
 
 
-def pack_linear(p: dict) -> dict:
+def pack_linear(p: dict, lp=None, *, name: str | None = None) -> dict:
     """Freeze one linear layer's latent weights to 2-bit planes (+ scale).
 
     Also stamps the measured nonzero-weight ``density`` — a scalar leaf that
@@ -83,10 +106,25 @@ def pack_linear(p: dict) -> dict:
     serving engine's init telemetry) reads the freeze-time measurement
     instead of re-deriving it from the planes.  The forward path
     (:func:`_packed_linear`) ignores it.
+
+    ``lp`` directs the packing: a ``repro.plan.LayerPlan`` / kernel name, or
+    a whole ``repro.plan.ModelPlan`` (resolved through ``name``).  A layer
+    the plan pins to ``dense`` at every bucket keeps fp weights (``{'wd'}``)
+    instead of 2-bit planes, so the dense escape hatch costs no decode at
+    serve time.  All T-SAR kernels share the plane packing, so any other
+    plan packs identically.
     """
     if "w" not in p:
         return p
+    if hasattr(lp, "layers"):        # ModelPlan: dense only if EVERY bucket is
+        by_bucket = lp.layers.get(name, {}) if name else {}
+        kerns = {e.kernel for e in by_bucket.values()}
+        kern = "dense" if kerns == {"dense"} else None
+    else:
+        kern = getattr(lp, "kernel", lp)
     t, scale = ternary.absmean_ternarize(p["w"])
+    if kern == "dense":
+        return {"wd": (t * scale[..., None, :]).astype(p["w"].dtype)}
     tw = ternary.pack(t, scale)
     return {"sign": tw.sign_plane, "zero": tw.zero_plane, "scale": tw.scale,
             "density": ternary.ternary_density(t)}

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import encdec, transformer
+from repro.plan import runtime as plan_runtime
 
 
 def _mod(cfg: ModelConfig):
@@ -22,8 +23,15 @@ def init_params(cfg: ModelConfig, key) -> dict:
     return _mod(cfg).init_params(cfg, key)
 
 
-def forward(cfg, params, batch, train=True, remat=False):
-    return _mod(cfg).forward(cfg, params, batch, train, remat=remat)
+# Inference entry points accept an optional compiled ``repro.plan.ModelPlan``:
+# the plan is activated around the model call, so every packed BitLinear
+# inside dispatches through the plan's trace-time table lookup instead of any
+# per-step kernel selection.  ``plan=None`` keeps whatever plan an enclosing
+# context (e.g. the serving engine) already activated.
+
+def forward(cfg, params, batch, train=True, remat=False, plan=None):
+    with plan_runtime.activate(plan):
+        return _mod(cfg).forward(cfg, params, batch, train, remat=remat)
 
 
 def loss_fn(cfg, params, batch, train=True, remat=False):
@@ -34,18 +42,22 @@ def init_cache(cfg, batch_size, max_len, dtype=jnp.float32):
     return _mod(cfg).init_cache(cfg, batch_size, max_len, dtype)
 
 
-def prefill(cfg, params, batch, cache, train=False):
-    return _mod(cfg).prefill(cfg, params, batch, cache, train)
+def prefill(cfg, params, batch, cache, train=False, plan=None):
+    with plan_runtime.activate(plan):
+        return _mod(cfg).prefill(cfg, params, batch, cache, train)
 
 
-def decode_step(cfg, params, tokens, cache, t, train=False):
-    return _mod(cfg).decode_step(cfg, params, tokens, cache, t, train)
+def decode_step(cfg, params, tokens, cache, t, train=False, plan=None):
+    with plan_runtime.activate(plan):
+        return _mod(cfg).decode_step(cfg, params, tokens, cache, t, train)
 
 
-def chunk_step(cfg, params, tokens, pos, cache, lengths, train=False):
+def chunk_step(cfg, params, tokens, pos, cache, lengths, train=False, plan=None):
     """Per-slot chunked-append step (paged serving engine): tokens/pos (B, C),
     lengths (B,) per-slot write offsets.  See transformer.chunk_step."""
-    return _mod(cfg).chunk_step(cfg, params, tokens, pos, cache, lengths, train)
+    with plan_runtime.activate(plan):
+        return _mod(cfg).chunk_step(cfg, params, tokens, pos, cache, lengths,
+                                    train)
 
 
 # ---------------------------------------------------------------------------

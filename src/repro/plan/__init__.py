@@ -1,0 +1,23 @@
+"""First-class execution plans: the kernel registry + compile-once/serve-many
+planning API (paper Sec. III-D / Fig. 5 "offline" phase).
+
+* ``registry`` — the :class:`KernelImpl` protocol and the five registered
+  kernels (``tsar_mxu``, ``tsar_lut``, ``tsar_sparse``, ``memory_lut``,
+  ``dense``); cost models, capability gates, and lowerings in one table.
+* ``plan`` — ``compile_plan(frozen_params, batch_profile) -> ModelPlan``,
+  JSON save/load, per-bucket lookup.
+* ``runtime`` — ``activate(plan)`` context + the ``planned(k, m, n)`` lookup
+  the serving forward path uses instead of re-running ``select_kernel``.
+
+See ``docs/plan.md`` for the lifecycle: freeze -> compile_plan -> save/load
+-> serve.
+"""
+from repro.plan import registry, runtime  # noqa: F401
+from repro.plan.plan import (  # noqa: F401
+    BatchProfile,
+    LayerPlan,
+    ModelPlan,
+    compile_plan,
+    compile_plan_from_shapes,
+    format_plan,
+)

@@ -1,0 +1,430 @@
+"""The kernel registry: every servable BitLinear kernel, declared once.
+
+The paper's offline phase "empirically selects the fastest kernel for each
+layer" (Sec. III-D / Fig. 5) and the runtime then just executes the choice.
+This module is the repo's single source of truth for what "a kernel" is:
+
+* :class:`KernelImpl` — the protocol every implementation satisfies:
+  ``name``, an analytic ``cost(n, k, m, c, density, block_density)`` against
+  the shared roofline constants, a ``supports(frozen)`` capability gate, a
+  ``tiles(n, k, m, c)`` default tile pick, and ``lower(frozen, x)`` — the
+  actual computation on a frozen layer.
+* the five implementations (``tsar_mxu``, ``tsar_lut``, ``tsar_sparse``,
+  ``memory_lut``, ``dense``) registered declaratively at import time.
+
+``core/dataflow.select_kernel`` reduces to an argmin over the registry's
+``selectable`` costs; ``core/bitlinear.apply_frozen`` reduces to
+``registry.get(name).lower(...)``; ``repro.plan.plan.compile_plan`` freezes
+the per-layer argmin into a durable :class:`~repro.plan.plan.ModelPlan`.
+
+Import-graph note: this module sits BELOW ``repro.core`` (core imports it),
+so everything from ``repro.core``/``repro.kernels`` is imported lazily
+inside methods.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+# The BitNet-b1.58 prior: absmean ternarization zeroes ~1/3 of the weights.
+# Used when no measured density is supplied.
+DEFAULT_DENSITY = 2.0 / 3.0
+
+# Canonical block-sparse tiling default; sparse/format re-exports it (via
+# core/dataflow) as DEFAULT_BLOCK_SHAPE.
+SPARSE_BLOCK = (256, 256)
+
+# Issue-efficiency tax on the sparse kernel's live-block work: the
+# scalar-prefetched gather walks the pool non-sequentially (no streaming
+# prefetch), and strips with fewer live blocks than the grid's s_max still
+# burn masked steps.  Charged on compute and the weight stream, it puts the
+# analytic break-even near 1/1.1 ~ 0.9 live blocks instead of degenerately
+# at 1.0.
+SPARSE_ISSUE_TAX = 1.1
+
+
+def _hw():
+    from repro.core import hw
+
+    return hw
+
+
+def _leaf(frozen, key: str):
+    """Uniform access to FrozenBitLinear fields / packed-param dict leaves."""
+    if isinstance(frozen, dict):
+        return frozen.get(key)
+    return getattr(frozen, key, None)
+
+
+def has_planes(frozen) -> bool:
+    if isinstance(frozen, dict):
+        # Stacked (scan/expert) plane dicts need a vmap wrapper, not lower().
+        return ("sign" in frozen and "zero" in frozen
+                and getattr(frozen["sign"], "ndim", 0) == 2)
+    return _leaf(frozen, "packed") is not None
+
+
+def _packed_of(frozen, x):
+    """The layer's TernaryWeights: FrozenBitLinear carries it; packed-param
+    dicts (``layers.pack_linear`` output) rebuild it from the planes, taking
+    the true K from the activations (planes store the padded ceil(K/8)*8)."""
+    packed = _leaf(frozen, "packed")
+    if packed is not None:
+        return packed
+    from repro.core import ternary
+
+    return ternary.TernaryWeights(
+        frozen["sign"], frozen["zero"], frozen["scale"],
+        (x.shape[-1], frozen["sign"].shape[-1]))
+
+
+def _c_of(frozen) -> int:
+    c = _leaf(frozen, "c")
+    return 4 if c is None else c
+
+
+def resolve_use_pallas(use_pallas: bool | None,
+                       interpret: bool | None = None) -> bool:
+    """``None`` auto-resolves from the backend: Pallas on TPU, the traceable
+    jnp spelling elsewhere.  Explicit True/False still forces — and so does
+    ``interpret=True``: requesting interpret mode means running the Pallas
+    kernel (that is how the kernels are validated off-TPU).  ``interpret=
+    False`` does NOT force Pallas — off-TPU the compiled Pallas path cannot
+    run, so it keeps the backend auto-resolution (jnp fallback on CPU)."""
+    if use_pallas is None:
+        if interpret:
+            return True
+        from repro.kernels import ops
+
+        return not ops._auto_interpret()
+    return use_pallas
+
+
+@runtime_checkable
+class KernelImpl(Protocol):
+    """What the planner and the runtime need from one kernel."""
+
+    name: str
+    selectable: bool  # costed by select_kernel (baselines are not)
+
+    def cost(self, n: int, k: int, m: int, c: int = 4,
+             density: float = DEFAULT_DENSITY,
+             block_density: float | None = None,
+             block_shape: tuple = SPARSE_BLOCK) -> tuple[float, float]:
+        """(compute_s, memory_s) roofline estimate."""
+        ...
+
+    def supports(self, frozen) -> bool:
+        """Can this kernel serve this frozen layer (encodings present)?"""
+        ...
+
+    def tiles(self, n: int, k: int, m: int, c: int = 4) -> tuple[int, ...]:
+        """Default tile sizes the Pallas wrapper would pick for this shape."""
+        ...
+
+    def lower(self, frozen, x: jax.Array, *, use_pallas: bool | None = None,
+              interpret: bool | None = None, lp=None) -> jax.Array:
+        """Run the kernel on a frozen layer: x (..., K) -> (..., M) f32.
+
+        ``lp`` (a ``repro.plan.LayerPlan``) carries the planned dataflow and
+        tile sizes; Pallas-bound lowerings execute them (grid order + tiling),
+        the jnp spellings ignore them (no grid to order)."""
+        ...
+
+
+def _int8_dot(frozen, x32):
+    """Shared exact decode->int8-dot spelling (traceable realization of the
+    decode-near-datapath kernels off-TPU; bit-equal to the Pallas output)."""
+    from repro.core import lut, ternary
+
+    packed = _packed_of(frozen, x32)
+    a_q, a_scale = ternary.quantize_activations(x32)
+    t = ternary.unpack(packed)
+    return lut.dense_int8_matmul(a_q, a_scale, t, packed.scale)
+
+
+def _ops_tiles(n: int, k: int, m: int) -> tuple[int, int, int]:
+    from repro.kernels import ops
+
+    return (ops._tile(n, 128, 8), ops._tile(k, 512, 128), ops._tile(m, 256, 128))
+
+
+class TsarMXU:
+    """Decode 2-bit planes to {-1,0,+1} int8 in VMEM, feed the MXU."""
+
+    name = "tsar_mxu"
+    selectable = True
+
+    def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
+             block_shape=SPARSE_BLOCK):
+        hw = _hw()
+        flops = 2.0 * n * k * m                      # int8 MACs on the MXU
+        decode_ops = k * m * 4.0                     # bitplane unpack ALU ops
+        compute = flops / hw.PEAK_FLOPS_INT8 + decode_ops / (hw.PEAK_FLOPS_INT8 / 2)
+        bytes_moved = (
+            k * m * 0.25                             # 2-bit packed weights
+            + n * k * 1.0                            # int8 activations
+            + n * m * 2.0                            # bf16 outputs
+            + m * 4.0                                # scales
+        )
+        return compute, bytes_moved / hw.HBM_BW
+
+    def supports(self, frozen):
+        return has_planes(frozen)
+
+    def tiles(self, n, k, m, c=4):
+        return _ops_tiles(n, k, m)
+
+    def lower(self, frozen, x, *, use_pallas=None, interpret=None, lp=None):
+        x32 = x.astype(jnp.float32)
+        if resolve_use_pallas(use_pallas, interpret):
+            from repro.kernels import ops
+
+            kw = {}
+            if lp is not None:      # execute the planned grid order + tiling
+                kw["dataflow"] = lp.dataflow
+                if len(lp.tile_sizes) == 3:
+                    kw["bn"], kw["bk"], kw["bm"] = lp.tile_sizes
+            return ops.tsar_matmul(x32, _packed_of(frozen, x),
+                                   interpret=interpret, **kw)
+        return _int8_dot(frozen, x32)
+
+
+class TsarLUT:
+    """Paper-faithful in-VMEM shared-LUT kernel (TLUT build + TGEMV gather)."""
+
+    name = "tsar_lut"
+    selectable = True
+
+    def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
+             block_shape=SPARSE_BLOCK):
+        hw = _hw()
+        blocks = k / c
+        lut_build = n * blocks * (2 ** c) * 1.0      # TLUT expansion ops
+        # Each gather lowered as one-hot x LUT: 2^c MACs per (block, m) pair,
+        # two gathers per block (pos/zero) fused into one 2^c-wide matmul.
+        gather = 2.0 * n * blocks * m * (2 ** c) / 8.0
+        compute = (lut_build + gather) / hw.PEAK_FLOPS_INT8
+        bytes_moved = (
+            2.0 * (k / c) * m * 1.0                  # idx_pos + idx_zero, 1B each
+            + n * k * 1.0
+            + n * m * 2.0
+            + m * 4.0
+        )
+        return compute, bytes_moved / hw.HBM_BW
+
+    def supports(self, frozen):
+        return _leaf(frozen, "idx_pos") is not None
+
+    def tiles(self, n, k, m, c=4):
+        from repro.kernels import ops
+
+        return (ops._tile(-(-k // c), 128, 8), ops._tile(m, 256, 128))
+
+    def lower(self, frozen, x, *, use_pallas=None, interpret=None, lp=None):
+        from repro.core import lut
+
+        x32 = x.astype(jnp.float32)
+        c = _c_of(frozen)
+        scale = _packed_of(frozen, x).scale
+        if resolve_use_pallas(use_pallas, interpret):
+            from repro.kernels import ops
+
+            kw = {}
+            if lp is not None and len(lp.tile_sizes) == 2:
+                kw["bb"], kw["bm"] = lp.tile_sizes
+            return ops.tsar_lut_gemv(x32, _leaf(frozen, "idx_pos"),
+                                     _leaf(frozen, "idx_zero"), scale,
+                                     c=c, interpret=interpret, **kw)
+        return lut.tsar_lut_matmul(x32, _leaf(frozen, "idx_pos"),
+                                   _leaf(frozen, "idx_zero"), c, scale)
+
+
+class TsarSparse:
+    """Zero-block-skipping matmul over a compacted BlockSparseTernary pool."""
+
+    name = "tsar_sparse"
+    selectable = True
+
+    def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
+             block_shape=SPARSE_BLOCK):
+        """MXU work and weight bytes scale with the LIVE-block fraction; the
+        index map (int32 per block) and per-strip gather lists are the
+        sparsity tax, which is why the dense kernel wins at density ~ 1."""
+        hw = _hw()
+        if block_density is None:
+            block_density = estimate_block_density(density, block_shape)
+        bk, bm = block_shape
+        kb, mb = max(k / bk, 1.0), max(m / bm, 1.0)
+        live = block_density * kb * mb
+        flops = 2.0 * n * bk * bm * live             # int8 MACs, live blocks only
+        decode_ops = bk * bm * live * 4.0            # bitplane unpack, live only
+        compute = SPARSE_ISSUE_TAX * (
+            flops / hw.PEAK_FLOPS_INT8 + decode_ops / (hw.PEAK_FLOPS_INT8 / 2))
+        bytes_moved = (
+            SPARSE_ISSUE_TAX * live * bk * bm * 0.25  # 2-bit planes, live blocks
+            + kb * mb * 4.0                          # block-index map (int32)
+            + 2.0 * live * 4.0                       # kids+slots gather lists
+            + n * k * 1.0                            # int8 activations
+            + n * m * 2.0                            # bf16 outputs
+            + m * 4.0                                # scales
+        )
+        return compute, bytes_moved / hw.HBM_BW
+
+    def supports(self, frozen):
+        return _leaf(frozen, "sparse") is not None
+
+    def tiles(self, n, k, m, c=4):
+        from repro.kernels import ops
+
+        bk, bm = SPARSE_BLOCK
+        return (ops._tile(n, 128, 8), bk, bm)
+
+    def lower(self, frozen, x, *, use_pallas=None, interpret=None, lp=None):
+        sparse = _leaf(frozen, "sparse")
+        if sparse is None:
+            raise ValueError("layer was frozen without a block-sparse sidecar")
+        x32 = x.astype(jnp.float32)
+        if resolve_use_pallas(use_pallas, interpret):
+            from repro.kernels import ops
+
+            kw = {}
+            if lp is not None and lp.tile_sizes:
+                kw["bn"] = lp.tile_sizes[0]   # bk/bm are fixed by the format
+            return ops.tsar_sparse_matmul(x32, sparse, interpret=interpret,
+                                          **kw)
+        # Traceable jnp fallback: identical math to the sparse kernel (the
+        # planes decode to the same ternary matrix, and skipped blocks
+        # contribute exact int32 zeros either way).  The zero-skip advantage
+        # itself only materializes in the Pallas kernel.
+        return _int8_dot(frozen, x32)
+
+
+class MemoryLUT:
+    """DRAM-resident 3^c-entry LUT gather — the bitnet.cpp-style baseline the
+    paper beats; kept servable for A/B runs, never chosen by the planner."""
+
+    name = "memory_lut"
+    selectable = False
+
+    def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
+             block_shape=SPARSE_BLOCK):
+        hw = _hw()
+        blocks = k / c
+        compute = 2.0 * n * blocks * m / hw.PEAK_FLOPS_INT8
+        bytes_moved = (
+            n * blocks * (3 ** c) * 4.0              # DRAM-resident LUT tables
+            + blocks * m * 1.0                       # index stream
+            + n * k * 1.0 + n * m * 2.0 + m * 4.0
+        )
+        return compute, bytes_moved / hw.HBM_BW
+
+    def supports(self, frozen):
+        return has_planes(frozen)
+
+    def tiles(self, n, k, m, c=4):
+        return _ops_tiles(n, k, m)
+
+    def lower(self, frozen, x, *, use_pallas=None, interpret=None, lp=None):
+        from repro.core import lut, ternary
+
+        packed = _packed_of(frozen, x)
+        c = _c_of(frozen)
+        x32 = x.astype(jnp.float32)
+        t = ternary.unpack(packed)
+        pad = (-t.shape[0]) % c   # ragged K: zero channels x zero weights = 0
+        if pad:
+            t = jnp.pad(t, ((0, pad), (0, 0)))
+            x32 = jnp.pad(x32, [(0, 0)] * (x32.ndim - 1) + [(0, pad)])
+        li = lut.ternary_lut_indices(t, c)
+        return lut.memory_lut_matmul(x32, li, c, packed.scale)
+
+
+class Dense:
+    """Dequantize to fp and run a plain matmul — the correctness oracle and
+    the escape hatch a hand-edited plan can force per layer."""
+
+    name = "dense"
+    selectable = False
+
+    def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
+             block_shape=SPARSE_BLOCK):
+        hw = _hw()
+        compute = 2.0 * n * k * m / hw.PEAK_FLOPS_BF16
+        bytes_moved = k * m * 2.0 + n * k * 2.0 + n * m * 2.0
+        return compute, bytes_moved / hw.HBM_BW
+
+    def supports(self, frozen):
+        return has_planes(frozen)
+
+    def tiles(self, n, k, m, c=4):
+        return _ops_tiles(n, k, m)
+
+    def lower(self, frozen, x, *, use_pallas=None, interpret=None, lp=None):
+        from repro.core import lut, ternary
+
+        w = ternary.unpack_dequant(_packed_of(frozen, x))
+        return lut.dense_matmul(x.astype(jnp.float32), w)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, KernelImpl] = {}
+
+
+def register(impl: KernelImpl) -> KernelImpl:
+    """Register a kernel implementation (later registrations override)."""
+    _REGISTRY[impl.name] = impl
+    return impl
+
+
+def get(name: str) -> KernelImpl:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel {name!r}; registered: {names()}") from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def selectable_names() -> tuple[str, ...]:
+    return tuple(n for n in names() if _REGISTRY[n].selectable)
+
+
+def available(frozen) -> tuple[str, ...]:
+    """Kernel names whose encodings are present on this frozen layer."""
+    return tuple(n for n in names() if _REGISTRY[n].supports(frozen))
+
+
+def estimate_block_density(density: float, block_shape: tuple = SPARSE_BLOCK) -> float:
+    """Live-block fraction under UNSTRUCTURED zeros at this density — which
+    makes essentially every block live (``1 - (1-d)^(bk*bm) ~ 1``), so the
+    sparse path is only chosen on *measured* structured sparsity."""
+    bk, bm = block_shape
+    return 1.0 - (1.0 - min(density, 1.0 - 1e-12)) ** (bk * bm)
+
+
+def candidate_costs(n: int, k: int, m: int, c: int = 4,
+                    density: float = DEFAULT_DENSITY,
+                    block_density: float | None = None,
+                    block_shape: tuple = SPARSE_BLOCK,
+                    ) -> dict[str, tuple[float, float]]:
+    """(compute_s, memory_s) per selectable kernel — the planner's input."""
+    return {
+        name: _REGISTRY[name].cost(n, k, m, c, density=density,
+                                   block_density=block_density,
+                                   block_shape=block_shape)
+        for name in selectable_names()
+    }
+
+
+for _impl in (TsarMXU(), TsarLUT(), TsarSparse(), MemoryLUT(), Dense()):
+    register(_impl)
+del _impl

@@ -33,6 +33,7 @@ Weight modes:
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -40,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers, model_zoo
+from repro.plan import BatchProfile, ModelPlan, compile_plan
+from repro.plan import runtime as plan_runtime
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.scheduler import ChunkedScheduler, Preempt, SlotState
 
@@ -167,7 +170,8 @@ class ServingEngine:
                  packed: bool = False, cache_dtype=jnp.float32, seed: int = 0,
                  prefill_chunk: int = 16, block_size: int = 16,
                  kv_blocks: int | None = None, policy: str | None = None,
-                 profile_density: bool = True):
+                 profile_density: bool = True,
+                 plan: ModelPlan | None = None):
         self.cfg = cfg
         self.params = freeze_params(params) if packed else params
         self.max_len = max_len
@@ -208,17 +212,65 @@ class ServingEngine:
             self.stats["weight_density_mean"] = self.density["density_mean"]
             self.stats["block_density_mean"] = self.density["block_density_mean"]
 
+        # Execution plan (paper Fig. 5 offline phase): compiled — or loaded,
+        # when the caller passes a ``ModelPlan`` saved next to the checkpoint
+        # — exactly once at init.  Every jitted step below runs inside
+        # ``plan_runtime.activate(self.plan)``, so the packed BitLinear
+        # dispatch is a trace-time plan lookup and ZERO ``select_kernel``
+        # calls happen after this constructor returns.
+        supplied = plan is not None
+        if plan is None and packed:
+            plan = compile_plan(self.params, BatchProfile(
+                decode_ns=(1, batch_slots),
+                prefill_ns=(prefill_chunk, batch_slots * (prefill_chunk + 1))))
+        self.plan = plan
+        if self.plan is not None:
+            self.stats["plan_layers"] = len(self.plan.layers)
+            # Shapes shared by layers with conflicting plans fall back to the
+            # default realization (the shape-keyed serve lookup can't tell
+            # them apart) — surface the count so operators notice.
+            self.stats["plan_shape_conflicts"] = len(self.plan.shape_conflicts())
+        if supplied:
+            # A loaded plan is only as good as its match to THIS model: a
+            # plan saved for another config resolves nothing and would
+            # silently serve every layer un-planned while telemetry claims
+            # otherwise.
+            if not packed:
+                warnings.warn(
+                    "repro.serving.ServingEngine: a ModelPlan was supplied "
+                    "but packed=False — qat serving never consults the plan",
+                    UserWarning, stacklevel=2)
+            else:
+                matched, total = self.plan.coverage(self.params)
+                self.stats["plan_matched_layers"] = matched
+                if matched < total:
+                    warnings.warn(
+                        f"repro.serving.ServingEngine: supplied plan resolves "
+                        f"only {matched}/{total} BitLinear layers of this "
+                        f"model; unmatched layers run the default realization "
+                        f"(was the plan compiled for a different config?)",
+                        UserWarning, stacklevel=2)
+
         # Donating the pools lets XLA update the block pools in place instead
         # of holding input + output copies alive across the step (on backends
         # without aliasing support jax falls back to a copy with a warning).
-        self._chunk_fn = jax.jit(
+        chunk_jit = jax.jit(
             lambda p, pools, tbl, tk, ps, ln, ei:
             _chunk_call(cfg, p, pools, tbl, tk, ps, ln, ei),
             donate_argnums=(1,))
-        self._prefill_fn = jax.jit(
+        prefill_jit = jax.jit(
             lambda p, pools, tbl, b, i:
             _whole_prefill_call(cfg, p, pools, tbl, b, i),
             donate_argnums=(1,))
+
+        def _planned(fn):
+            def call(*args):
+                with plan_runtime.activate(self.plan):
+                    return fn(*args)
+            return call
+
+        self._chunk_fn = _planned(chunk_jit)
+        self._prefill_fn = _planned(prefill_jit)
 
     # -- request management --------------------------------------------------
 

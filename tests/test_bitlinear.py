@@ -46,7 +46,7 @@ class TestFrozen:
     def test_all_kernels_agree(self, setup):
         p, x = setup
         fz = bitlinear.freeze(p)
-        outs = {k: bitlinear.apply_frozen(fz, x, kernel=k)
+        outs = {k: bitlinear.apply_frozen(fz, x, plan=k)
                 for k in ("tsar_lut", "tsar_mxu", "memory_lut", "dense")}
         base = np.asarray(outs["dense"])
         for k, v in outs.items():
@@ -56,7 +56,7 @@ class TestFrozen:
     def test_auto_dispatch_runs(self, setup):
         p, x = setup
         fz = bitlinear.freeze(p)
-        y = bitlinear.apply_frozen(fz, x, kernel="auto")
+        y = bitlinear.apply_frozen(fz, x)   # plan=None -> auto-select
         assert y.shape == (8, 64)
 
     def test_packed_storage_is_2bit(self, setup):

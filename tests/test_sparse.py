@@ -184,8 +184,8 @@ class TestDensityDispatch:
             n=4, k=k, m=m, c=fz.c, density=fz.density,
             block_density=fz.block_density, block_shape=fz.sparse.block_shape)
         assert choice.kernel == "tsar_sparse"
-        y_auto = bitlinear.apply_frozen(fz, x, kernel="auto")
-        y_dense = bitlinear.apply_frozen(fz, x, kernel="tsar_mxu")
+        y_auto = bitlinear.apply_frozen(fz, x)   # plan=None -> auto-select
+        y_dense = bitlinear.apply_frozen(fz, x, plan="tsar_mxu")
         np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
                                    rtol=1e-5, atol=1e-4)
 
@@ -193,7 +193,7 @@ class TestDensityDispatch:
         fz = bitlinear.freeze(bitlinear.init(jax.random.PRNGKey(0), 128, 64))
         fz = fz._replace(sparse=None, block_density=0.01)
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 128))
-        y = bitlinear.apply_frozen(fz, x, kernel="auto")   # must not raise
+        y = bitlinear.apply_frozen(fz, x)                  # must not raise
         assert y.shape == (2, 64)
 
 

@@ -64,8 +64,16 @@ class TestClaim1Speedup:
         reqs = lambda: [Request(uid=i, prompt=np.arange(6), max_new_tokens=6)
                         for i in range(3)]
         e_lat = ServingEngine(cfg, params, max_len=48, batch_slots=2)
-        r_lat = e_lat.run(reqs())
         e_pak = ServingEngine(cfg, params, max_len=48, batch_slots=2, packed=True)
+        # Warm both engines' prefill/decode executables first: the initial
+        # pure-decode step pays its XLA compile inside decode_s, and compile
+        # latency scales with how loaded the test process already is — which
+        # is noise, not the steady-state decode cadence this asserts.
+        e_lat.run(reqs())
+        e_pak.run(reqs())
+        for e in (e_lat, e_pak):
+            e.stats.update(decode_s=0.0, decode_tokens=0)
+        r_lat = e_lat.run(reqs())
         r_pak = e_pak.run(reqs())
         assert [r.out_tokens for r in r_lat] == [r.out_tokens for r in r_pak]
         assert e_pak.throughput() > 0.8 * e_lat.throughput(), (
