@@ -6,14 +6,27 @@ visible in the CSV: each row carries the measured weight density, live-block
 density, and the kernel ``select_kernel`` would dispatch at that density.
 The ``tsar_sparse`` interpret-mode time drops with block density (its grid
 runs over live blocks only); the dense kernels' stays flat.
+
+**Calibration mode** (``python -m benchmarks.bench_kernels --calibrate``):
+the sparse cost model's issue tax started as an analytic 1.1x guess; this
+mode measures dense-vs-sparse timings over the density sweep, fits the tax
+(:func:`fit_issue_tax` — the median of ``t_sparse / (block_density *
+t_dense)``, i.e. the per-live-block slowdown relative to the dense kernel's
+per-block time), installs it in ``repro.core.hw`` via ``set_calibration``,
+and optionally persists it (``--save FILE`` -> ``hw.load_calibration`` at
+deployment).  Every registry cost model reads the live value through
+``hw.sparse_issue_tax()``, so the fitted constant shifts the analytic
+break-even machine-wide.
 """
 from __future__ import annotations
+
+import statistics
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, timeit
-from repro.core import dataflow, ternary
+from repro.core import dataflow, hw, ternary
 from repro.kernels import ops
 from repro.sparse import format as sparse_format, stats as sparse_stats
 
@@ -64,3 +77,90 @@ def run(quick: bool = False):
                     x, reps=2, warmup=1)
         csv_row(f"pallas_lut_{n}x{k}x{m}", tt * 1e6, "interpret_mode=1")
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Issue-tax calibration
+# ---------------------------------------------------------------------------
+
+def fit_issue_tax(samples) -> float:
+    """Fit the sparse issue tax from measured (block_density, t_sparse_s,
+    t_dense_s) rows.
+
+    Model: the sparse kernel performs ``block_density`` of the dense
+    kernel's block work, times an issue-efficiency tax — so
+    ``tax = t_sparse / (block_density * t_dense)`` per row; the median over
+    the sweep rejects timing outliers.  Pure function: unit-testable without
+    touching a clock.
+    """
+    ratios = [ts / (bd * td) for bd, ts, td in samples
+              if bd > 0.0 and td > 0.0 and ts > 0.0]
+    if not ratios:
+        raise ValueError("no usable (block_density, t_sparse, t_dense) rows")
+    return float(statistics.median(ratios))
+
+
+def measure_issue_tax_samples(quick: bool = True, reps: int = 3):
+    """Timed dense-vs-sparse pairs over the block-kill sweep (interpret
+    mode — relative per-block cost is what the fit needs, not absolute TPU
+    time)."""
+    shapes = [(8, 512, 512)] if quick else [(8, 512, 512), (1, 1024, 1024)]
+    samples = []
+    for (n, k, m) in shapes:
+        key = jax.random.PRNGKey(n + k)
+        x = jax.random.normal(key, (n, k))
+        scale = jnp.ones((m,))
+        t_dense_ref = None
+        for p_zero in P_ZERO_SWEEP:
+            t = sparse_format.random_block_sparse_ternary(
+                key, (k, m), bk=BK, bm=BM, p_zero_block=p_zero)
+            bst = sparse_format.from_ternary(t, scale, bk=BK, bm=BM)
+            if bst.n_live == 0:
+                continue
+            if t_dense_ref is None:
+                tw = ternary.pack(t.astype(jnp.float32), scale)
+                t_dense_ref = timeit(
+                    lambda x: ops.tsar_matmul(x, tw, interpret=True),
+                    x, reps=reps, warmup=1)
+            ts = timeit(lambda x: ops.tsar_sparse_matmul(x, bst, interpret=True),
+                        x, reps=reps, warmup=1)
+            samples.append((bst.block_density, ts, t_dense_ref))
+    return samples
+
+
+def calibrate(quick: bool = True, save: str | None = None,
+              apply: bool = True) -> float:
+    """Measure, fit, and install the sparse issue tax (see module docstring).
+
+    Returns the fitted tax.  ``apply=False`` fits without mutating the
+    process-global calibration (dry run); ``save`` writes the calibration
+    JSON that ``repro.core.hw.load_calibration`` consumes at deployment —
+    independently of ``apply``, so fit-and-persist needs no global install.
+    """
+    tax = fit_issue_tax(measure_issue_tax_samples(quick=quick))
+    csv_row("sparse_issue_tax_fit", tax,   # dimensionless, not us
+            f"analytic_default={hw.SPARSE_ISSUE_TAX};applied={int(apply)}")
+    if apply:
+        hw.set_calibration(sparse_issue_tax=tax)
+    if save:
+        hw.save_calibration(save, {"sparse_issue_tax": tax})
+    return tax
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="fit the sparse issue tax from measured timings")
+    ap.add_argument("--save", default=None,
+                    help="write the fitted calibration JSON here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.calibrate:
+        tax = calibrate(quick=args.quick, save=args.save)
+        print(f"# fitted sparse_issue_tax = {tax:.3f} "
+              f"(analytic default {hw.SPARSE_ISSUE_TAX})")
+    else:
+        run(quick=args.quick)

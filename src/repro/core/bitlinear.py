@@ -91,12 +91,14 @@ class FrozenBitLinear(NamedTuple):
     idx_pos: jax.Array               # (K//c, M) uint8 LUT encodings
     idx_zero: jax.Array
     c: int
-    # Sparsity sidecar (None when frozen under tracing — compaction is
-    # data-dependent): the block pool + the measured densities that drive
+    # Sparsity sidecars: the compacted pool is None when frozen under tracing
+    # (compaction is data-dependent); the PADDED pool (static shapes) can be
+    # emitted even under tracing.  Plus the measured densities that drive
     # the 'auto' kernel dispatch.
     sparse: Any = None               # sparse_format.BlockSparseTernary | None
     density: float | None = None     # measured nonzero-weight fraction
     block_density: float | None = None  # measured live-block fraction
+    padded: Any = None               # sparse_format.PaddedBlockSparseTernary
 
     @property
     def shape(self):
@@ -104,35 +106,66 @@ class FrozenBitLinear(NamedTuple):
 
 
 def freeze(params: dict, c: int = DEFAULT_C,
-           block_shape: tuple | None = None) -> FrozenBitLinear:
+           block_shape: tuple | None = None,
+           padded: bool | None = None,
+           max_live: int | None = None,
+           s_steps: int | None = None) -> FrozenBitLinear:
     """Compile-time weight encoding (paper Fig. 5 'offline' phase).
 
     On concrete weights this measures density / block occupancy and — only
     when the live-block fraction is below ``SPARSE_SIDE_CAR_THRESHOLD`` —
-    compacts the block-sparse sidecar
-    (``repro.sparse.format.BlockSparseTernary``); under tracing
-    (``jax.eval_shape`` etc.) all of it is skipped — pool compaction is
-    data-dependent.
+    emits the sparse sidecars: the compacted
+    ``repro.sparse.format.BlockSparseTernary`` pool AND its padded
+    (vmappable) twin, the latter sized to this layer's own live count unless
+    the caller passes a model-wide ``max_live``/``s_steps`` bound.
+
+    Under tracing (``jax.eval_shape``, ``vmap``) compaction is impossible
+    (data-dependent pool size), so the compacted sidecar and the measured
+    densities are skipped — but ``padded=True`` still emits the padded pool:
+    its construction is pure ``jnp`` (static shapes, default full-grid
+    ``max_live``), which is what lets stacked scan-layer freezes carry
+    per-layer pools through ``vmap``.  ``padded=True`` uses those same
+    defaults on CONCRETE weights too, so traced and eager freezes of the
+    same call agree on every sidecar shape (tight data-dependent sizing is
+    the ``padded=None`` auto behavior, which tracing skips entirely).
     """
     t, scale = ternary.absmean_ternarize(params["w"])
     t8 = t.astype(jnp.int8)
     idx_pos, idx_zero = ternary.pack_indices(t8, c)
-    sparse = None
+    sparse = padded_sidecar = None
     density = block_density = None
-    if not isinstance(t8, jax.core.Tracer):
-        from repro.sparse import format as sparse_format
+    from repro.sparse import format as sparse_format
+
+    bk, bm = block_shape or sparse_format.DEFAULT_BLOCK_SHAPE
+    if isinstance(t8, jax.core.Tracer):
+        if padded:
+            padded_sidecar = sparse_format.pad_from_ternary(
+                t8, scale, bk=bk, bm=bm, max_live=max_live, s_steps=s_steps)
+    else:
         from repro.sparse import stats as sparse_stats
 
-        bk, bm = block_shape or sparse_format.DEFAULT_BLOCK_SHAPE
         occ = sparse_stats.block_occupancy(t8, bk, bm)
         density = float(ternary.ternary_density(t8))
         block_density = float((occ > 0).mean())
         if block_density < SPARSE_SIDE_CAR_THRESHOLD:
             sparse = sparse_format.from_ternary(t8, scale, bk=bk, bm=bm,
                                                 occupancy=occ)
+        if padded:
+            # Same defaults as the traced branch (full-grid max_live when
+            # unspecified), so eval_shape/jit freezes and eager freezes of
+            # the same call agree on every sidecar shape.
+            padded_sidecar = sparse_format.pad_from_ternary(
+                t8, scale, bk=bk, bm=bm, max_live=max_live, s_steps=s_steps)
+        elif padded is None and sparse is not None:
+            # Auto: tight per-layer pool (tracing emits nothing under auto,
+            # so there is no traced counterpart to stay shape-compatible
+            # with).
+            padded_sidecar = sparse_format.pad_pool(
+                sparse, max_live=max_live, s_steps=s_steps)
     return FrozenBitLinear(
         packed=ternary.pack(t, scale), idx_pos=idx_pos, idx_zero=idx_zero, c=c,
         sparse=sparse, density=density, block_density=block_density,
+        padded=padded_sidecar,
     )
 
 
@@ -161,11 +194,11 @@ def resolve_kernel(frozen: FrozenBitLinear, n: int, plan=None) -> str:
     None (auto).  Auto feeds the layer's *measured* density / block occupancy
     (stamped by :func:`freeze`) into the registry cost models, so a
     checkpoint with structurally dead blocks is served by the zero-skipping
-    kernel without any caller change.  A planned/auto ``tsar_sparse`` on a
-    layer frozen without a sidecar (e.g. a saved plan applied to a model
-    re-frozen under tracing, where compaction is skipped) degrades to
-    ``tsar_mxu`` — same math; only an *explicit* ``plan='tsar_sparse'``
-    string still raises.
+    kernel without any caller change.  A planned/auto sparse-family kernel
+    on a layer missing that format (e.g. a saved plan applied to a model
+    re-frozen under tracing, where compaction is skipped) degrades to its
+    sibling format when present, else ``tsar_mxu`` — same math; only an
+    *explicit* sparse kernel name string still raises.
     """
     if plan is None or plan == "auto":
         from repro.core.dataflow import select_kernel
@@ -174,18 +207,24 @@ def resolve_kernel(frozen: FrozenBitLinear, n: int, plan=None) -> str:
         kw = {}
         if frozen.density is not None:
             kw["density"] = frozen.density
-        if frozen.block_density is not None and frozen.sparse is not None:
+        sidecar = frozen.sparse if frozen.sparse is not None else frozen.padded
+        if frozen.block_density is not None and sidecar is not None:
             kw["block_density"] = frozen.block_density
-            kw["block_shape"] = frozen.sparse.block_shape
+            kw["block_shape"] = sidecar.block_shape
+            kw["sparse_ok"] = tuple(
+                kn for kn in registry.SPARSE_KERNELS
+                if registry.get(kn).supports(frozen))
         name = select_kernel(n=n, k=k, m=m, c=frozen.c, **kw).kernel
     elif isinstance(plan, str):
         name = plan
     else:                        # LayerPlan (or anything with .kernel)
         name = plan.kernel
     explicit = isinstance(plan, str) and plan != "auto"
-    if name == "tsar_sparse" and not explicit \
+    if name in registry.SPARSE_KERNELS and not explicit \
             and not registry.get(name).supports(frozen):
-        name = "tsar_mxu"
+        name = next((kn for kn in registry.SPARSE_KERNELS
+                     if kn != name and registry.get(kn).supports(frozen)),
+                    "tsar_mxu")
     return name
 
 

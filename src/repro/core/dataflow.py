@@ -31,13 +31,14 @@ from repro.core.hw import (  # noqa: F401  (re-exported for back-compat)
     HBM_BW,
     PEAK_FLOPS_BF16,
     PEAK_FLOPS_INT8,
+    SPARSE_ISSUE_TAX,
     VMEM_BYTES,
 )
 from repro.plan import registry as _registry
 from repro.plan.registry import (  # noqa: F401  (canonical home is the registry)
     DEFAULT_DENSITY,
     SPARSE_BLOCK,
-    SPARSE_ISSUE_TAX,
+    SPARSE_KERNELS,
 )
 
 
@@ -70,7 +71,8 @@ def _tsar_sparse_cost(n: int, k: int, m: int, block_density: float,
 def select_kernel(n: int, k: int, m: int, c: int = 4,
                   density: float = DEFAULT_DENSITY,
                   block_density: float | None = None,
-                  block_shape: tuple = SPARSE_BLOCK) -> KernelChoice:
+                  block_shape: tuple = SPARSE_BLOCK,
+                  sparse_ok: tuple | None = None) -> KernelChoice:
     """Compile-time per-layer selection (paper: 'empirically selects the
     fastest kernel for each layer'); an analytic roofline argmin over the
     registry's selectable kernels.
@@ -82,6 +84,13 @@ def select_kernel(n: int, k: int, m: int, c: int = 4,
     every block live (``1 - (1-d)^(bk*bm) ~ 1``), so the sparse path is only
     chosen on *measured* structured sparsity, never speculatively.
 
+    ``sparse_ok`` restricts the sparse-family candidates
+    (``registry.SPARSE_KERNELS``) to the formats the layer actually carries:
+    ``compile_plan`` passes the subset whose ``supports()`` gate passes, so a
+    plan never commits to e.g. ``tsar_sparse`` on a layer that only holds a
+    padded pool.  ``None`` keeps every selectable kernel in play (legacy
+    shape-only calls; resolve-time degradation still guards execution).
+
     Serve-path note: this runs at PLAN time only.  The serving engine calls
     it (via ``repro.plan.compile_plan``) once at init; the jitted step then
     dispatches through the frozen ``ModelPlan``.
@@ -91,13 +100,20 @@ def select_kernel(n: int, k: int, m: int, c: int = 4,
     costs = _registry.candidate_costs(n, k, m, c, density=density,
                                      block_density=block_density,
                                      block_shape=block_shape)
+    if sparse_ok is not None:
+        costs = {kn: v for kn, v in costs.items()
+                 if kn not in SPARSE_KERNELS or kn in sparse_ok}
     cands = {name: max(comp, mem) for name, (comp, mem) in costs.items()}
     # Strict improvement required: at/above break-even the dense paths win
     # (no format conversion for a wash).
-    dense_cands = {kn: v for kn, v in cands.items() if kn != "tsar_sparse"}
+    dense_cands = {kn: v for kn, v in cands.items()
+                   if kn not in SPARSE_KERNELS}
     kernel = min(dense_cands, key=dense_cands.get)
-    if cands.get("tsar_sparse", float("inf")) < dense_cands[kernel]:
-        kernel = "tsar_sparse"
+    sparse_cands = {kn: v for kn, v in cands.items() if kn in SPARSE_KERNELS}
+    if sparse_cands:
+        best_sparse = min(sparse_cands, key=sparse_cands.get)
+        if sparse_cands[best_sparse] < dense_cands[kernel]:
+            kernel = best_sparse
     comp, mem = costs[kernel]
     dataflow = select_dataflow(n, k, m, c)
     return KernelChoice(
@@ -111,17 +127,23 @@ def select_kernel(n: int, k: int, m: int, c: int = 4,
 
 
 def sparse_break_even(n: int, k: int, m: int, c: int = 4,
-                      block_shape: tuple = SPARSE_BLOCK) -> float:
-    """Block density below which ``tsar_sparse`` beats the best dense kernel.
+                      block_shape: tuple = SPARSE_BLOCK,
+                      kernel: str = "tsar_sparse") -> float:
+    """Block density below which ``kernel`` (a sparse-family member — the
+    compacted ``tsar_sparse`` by default, or ``tsar_sparse_padded``) beats
+    the best dense kernel.
 
     The sparse cost is monotonically increasing in block density and the
     dense costs are constant, so the crossover is unique; found by bisection
     to stay consistent with :func:`select_kernel` exactly.
     """
+    if kernel not in SPARSE_KERNELS:
+        raise ValueError(f"{kernel!r} is not a sparse kernel: {SPARSE_KERNELS}")
     best_dense = min(
         max(*_registry.get(name).cost(n, k, m, c))
-        for name in _registry.selectable_names() if name != "tsar_sparse")
-    sp = _registry.get("tsar_sparse")
+        for name in _registry.selectable_names()
+        if name not in SPARSE_KERNELS)
+    sp = _registry.get(kernel)
 
     def sparse(bd: float) -> float:
         sc, sm = sp.cost(n, k, m, c, block_density=bd, block_shape=block_shape)

@@ -3,11 +3,114 @@
 Previously duplicated between ``core/dataflow.py`` (kernel selection cost
 model) and ``launch/roofline.py`` (dry-run roofline extraction); both now
 import from here so a calibration tweak cannot desynchronize the two models.
+
+Besides the fixed datasheet numbers, this module owns the **calibratable**
+cost-model constants.  ``SPARSE_ISSUE_TAX`` started life as an analytic guess
+(the sparse kernels' scalar-prefetched pool gather walks HBM non-sequentially
+and masked tail steps still burn grid issue slots); the calibration mode in
+``benchmarks/bench_kernels.py`` fits it from measured interpret-mode timings
+and installs the fitted value here (``set_calibration``), which every
+registry cost model then reads through :func:`sparse_issue_tax` — so a
+measured machine overrides the guess without touching the cost formulas.
 """
 from __future__ import annotations
+
+import json
 
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
 PEAK_FLOPS_INT8 = 394e12       # int8 ops/s (2x bf16 on the v5e MXU)
 HBM_BW = 819e9                 # bytes/s
 VMEM_BYTES = 128 * 1024 * 1024
 ICI_LINK_BW = 50e9             # bytes/s per ICI link (~ spec value)
+
+# Issue-efficiency tax on the sparse kernels' live-block work (analytic
+# default; see module docstring).  Puts the break-even near 1/1.1 ~ 0.9 live
+# blocks instead of degenerately at 1.0.
+SPARSE_ISSUE_TAX = 1.1
+
+# Cost of one MASKED grid step in the padded-pool sparse kernel, as a
+# fraction of a live block's compute: the static s_steps walk issues the
+# step (grid bookkeeping + predicated-off DMA slot) even when the
+# ``s < counts[j]`` guard drops the MXU work.
+SPARSE_PAD_STEP_FRAC = 0.05
+
+# Calibratable keys and their analytic defaults.  Values installed via
+# set_calibration() shadow the module constants for every reader that goes
+# through the accessor functions (the kernel registry cost models do).
+_CALIBRATION_DEFAULTS = {
+    "sparse_issue_tax": SPARSE_ISSUE_TAX,
+    "sparse_pad_step_frac": SPARSE_PAD_STEP_FRAC,
+}
+_CALIBRATED: dict[str, float] = {}
+
+
+def sparse_issue_tax() -> float:
+    """The live value: calibrated if installed, else the analytic default."""
+    return _CALIBRATED.get("sparse_issue_tax", SPARSE_ISSUE_TAX)
+
+
+def sparse_pad_step_frac() -> float:
+    return _CALIBRATED.get("sparse_pad_step_frac", SPARSE_PAD_STEP_FRAC)
+
+
+def set_calibration(**values: float) -> None:
+    """Install measured cost-model constants (``benchmarks/bench_kernels.py
+    --calibrate`` is the producer).  Unknown keys / non-positive values are
+    rejected loudly — a typo'd calibration silently reverting to defaults
+    would defeat the point."""
+    for key, val in values.items():
+        if key not in _CALIBRATION_DEFAULTS:
+            raise ValueError(
+                f"unknown calibration key {key!r}; known: "
+                f"{sorted(_CALIBRATION_DEFAULTS)}")
+        val = float(val)
+        if not val > 0.0:
+            raise ValueError(f"calibration {key}={val!r} must be > 0")
+        _CALIBRATED[key] = val
+
+
+def clear_calibration(*keys: str) -> None:
+    """Drop calibrated values (all of them when called with no args)."""
+    if not keys:
+        _CALIBRATED.clear()
+        return
+    for key in keys:
+        _CALIBRATED.pop(key, None)
+
+
+def calibration() -> dict[str, float]:
+    """The effective constants (defaults overlaid with calibrated values)."""
+    out = dict(_CALIBRATION_DEFAULTS)
+    out.update(_CALIBRATED)
+    return out
+
+
+def save_calibration(path, values: dict | None = None) -> None:
+    """Write the calibration JSON ``load_calibration`` consumes.
+
+    ``values`` defaults to the currently installed calibration; an explicit
+    dict (validated against the known keys) lets a fit be persisted without
+    installing it process-globally — either way this function is the one
+    writer of the file format.
+    """
+    if values is None:
+        values = dict(_CALIBRATED)
+    else:
+        for key, val in values.items():
+            if key not in _CALIBRATION_DEFAULTS:
+                raise ValueError(
+                    f"unknown calibration key {key!r}; known: "
+                    f"{sorted(_CALIBRATION_DEFAULTS)}")
+            if not float(val) > 0.0:
+                raise ValueError(f"calibration {key}={val!r} must be > 0")
+    with open(path, "w") as f:
+        json.dump({"version": 1, "calibration": dict(values)}, f, indent=2)
+
+
+def load_calibration(path) -> dict[str, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("version") != 1:
+        raise ValueError(f"calibration version {payload.get('version')!r} != 1")
+    set_calibration(**payload["calibration"])
+    return dict(payload["calibration"])

@@ -3,7 +3,9 @@
 * ``tsar_matmul`` — production packed-ternary matmul (decode-in-VMEM -> MXU).
 * ``tsar_lut`` — paper-faithful in-VMEM TLUT/TGEMV kernel.
 * ``tsar_sparse`` — zero-block-skipping matmul over a compacted
-  ``BlockSparseTernary`` pool (scalar-prefetched block-id gather).
+  ``BlockSparseTernary`` pool (scalar-prefetched block-id gather), plus the
+  padded-pool 2-D variant (static ``s_steps`` walk + activation-tile skip)
+  that vmapped/stacked serving weights run.
 * ``ops`` — jitted public wrappers (padding, quant, interpret fallback).
 * ``ref`` — pure-jnp oracles.
 

@@ -144,6 +144,51 @@ def tsar_sparse_matmul(
     return _unflatten_lead(y, lead, n, m)
 
 
+def tsar_sparse_padded_matmul(
+    x: jax.Array,
+    pbst: "sparse_format.PaddedBlockSparseTernary",
+    *,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """BitLinear matmul via the padded-pool 2-D zero-skip kernel.
+
+    ``x`` (..., K) float -> (..., M) float32.  Same pipeline as
+    :func:`tsar_sparse_matmul`, but the weights are a static-shaped
+    :class:`PaddedBlockSparseTernary` pool (so the call is vmappable over
+    stacked scan layers) and the schedule is 2-D: dead weight blocks are
+    skipped via ``counts`` AND all-zero (bn, bk) activation tiles via a
+    per-(n-strip, k-block) liveness map computed here from the quantized
+    activations.  Both skips drop exact int32 zeros — output is
+    bit-identical to :func:`tsar_matmul`.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    k, m = pbst.shape
+    bk, bm = pbst.block_shape
+    kb, mb = pbst.grid
+    x2, lead, n = _flatten_lead(x)
+
+    bn_ = _tile(n, bn, 8)
+    a_q, a_scale = _quantize_padded(x2, bn_, kb * bk)
+    wsc = _pad_to(pbst.scale, 0, mb * bm)
+
+    # Activation-side liveness: one flag per (n-strip, k-block) tile.  Padded
+    # rows/channels are zero, so the map also encodes the shape padding.
+    n_t = a_q.shape[0] // bn_
+    act_live = jnp.any(
+        a_q.reshape(n_t, bn_, kb, bk) != 0, axis=(1, 3)).astype(jnp.int32)
+
+    y = _sparse_kernel.tsar_sparse_padded_matmul_packed(
+        a_q, a_scale, pbst.sign_pool, pbst.zero_pool,
+        pbst.kids, pbst.slots, pbst.counts, act_live,
+        wsc.reshape(1, mb * bm),
+        bn=bn_, bk=bk, bm=bm, s_steps=max(pbst.s_steps, 1),
+        interpret=interpret,
+    )
+    return _unflatten_lead(y, lead, n, m)
+
+
 def tsar_lut_gemv(
     x: jax.Array,
     idx_pos: jax.Array,

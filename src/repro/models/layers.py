@@ -52,13 +52,20 @@ def _packed_linear(p: dict, x: jax.Array) -> jax.Array:
     When a ``ModelPlan`` is active (the serving engine activates its plan
     around every jitted step) the planned kernel for this layer's (k, m) at
     the step's token count decides the realization — a trace-time constant
-    table lookup, never a ``select_kernel`` call.  Off-TPU every T-SAR kernel
-    family realizes as the same exact decode->int8-dot spelling below (the
-    Pallas grids differ on TPU, the integer math does not), so planned
-    ``tsar_mxu``/``tsar_lut``/``tsar_sparse`` are bit-identical here; the
-    baselines genuinely switch: planned ``dense`` runs the dequantized fp
-    matmul and planned ``memory_lut`` the DRAM-LUT gather (both via the
-    registry lowering), so A/B plans measure what their label says.
+    table lookup, never a ``select_kernel`` call.  Off-TPU the dense T-SAR
+    kernel families realize as the same exact decode->int8-dot spelling
+    below (the Pallas grids differ on TPU, the integer math does not), so
+    planned ``tsar_mxu``/``tsar_lut`` are bit-identical here; a planned
+    ``tsar_sparse_padded`` runs the registry lowering over the layer's
+    ``sp_*`` padded-pool leaves — the weights decoded in the jitted step
+    come FROM THE POOL (vmap-stacked per scan layer), bit-identical to the
+    planes decode because the pool round-trips exactly; and the baselines
+    genuinely switch: planned ``dense`` runs the dequantized fp matmul and
+    planned ``memory_lut`` the DRAM-LUT gather (both via the registry
+    lowering), so A/B plans measure what their label says.  A planned
+    ``tsar_sparse`` (compacted — unserveable from a params tree, its pool
+    size is data-dependent) degrades to the padded lowering when the leaves
+    are present, else to the planes spelling — same math either way.
 
     The only weight bytes read are the two uint8 bitplanes (+ per-channel
     scales): this is what makes the serve-path HBM traffic 8x smaller than
@@ -74,10 +81,23 @@ def _packed_linear(p: dict, x: jax.Array) -> jax.Array:
     for d in x.shape[:-1]:   # static at trace time
         n *= d
     lp = plan_runtime.planned(k, m, n)
-    if lp is not None and lp.kernel in ("dense", "memory_lut"):
+    if lp is not None:
         from repro.plan import registry
 
-        return registry.get(lp.kernel).lower(p, x)
+        kern = lp.kernel
+        if kern in registry.SPARSE_KERNELS:
+            # Compacted pools can't ride a params tree (data-dependent
+            # size): remap within the sparse family to whatever format the
+            # leaves actually carry, else fall through to the planes
+            # spelling (same math).
+            kern = next((kn for kn in registry.SPARSE_KERNELS
+                         if registry.get(kn).supports(p)), kern)
+        impl = registry.get(kern)
+        # serve_via_registry is each impl's own declaration that its
+        # lowering differs from the planes spelling below (see the
+        # KernelImpl protocol) — the registry stays the source of truth.
+        if getattr(impl, "serve_via_registry", False) and impl.supports(p):
+            return impl.lower(p, x, lp=lp)
     sign = _unpack_plane_nd(p["sign"], k)   # int8 {0,1}
     zero = _unpack_plane_nd(p["zero"], k)
     t = ((1 - 2 * sign) * (1 - zero)).astype(jnp.int8)
@@ -97,7 +117,10 @@ def _unpack_plane_nd(plane: jax.Array, k: int) -> jax.Array:
     return bits.reshape((kp,) + plane.shape[1:])[:k].astype(jnp.int8)
 
 
-def pack_linear(p: dict, lp=None, *, name: str | None = None) -> dict:
+def pack_linear(p: dict, lp=None, *, name: str | None = None,
+                sparse: bool = False, block_shape: tuple | None = None,
+                max_live: int | None = None,
+                s_steps: int | None = None) -> dict:
     """Freeze one linear layer's latent weights to 2-bit planes (+ scale).
 
     Also stamps the measured nonzero-weight ``density`` — a scalar leaf that
@@ -113,6 +136,16 @@ def pack_linear(p: dict, lp=None, *, name: str | None = None) -> dict:
     instead of 2-bit planes, so the dense escape hatch costs no decode at
     serve time.  All T-SAR kernels share the plane packing, so any other
     plan packs identically.
+
+    ``sparse=True`` additionally emits the PADDED block-sparse pool
+    (``repro.sparse.format.pad_from_ternary``) as ``sp_*`` leaves plus a
+    measured ``block_density`` leaf.  The construction is pure ``jnp`` and
+    the leaf shapes are static (``max_live``/``s_steps`` bound the pool, the
+    full block grid by default), so this works under ``vmap`` — which is how
+    ``serving.freeze_params`` stacks per-scan-layer pools that ride a
+    ``lax.scan`` through the jitted serving step.  The serve-path dispatch
+    (:func:`_packed_linear`) runs the ``tsar_sparse_padded`` lowering from
+    these leaves when the active plan says so.
     """
     if "w" not in p:
         return p
@@ -126,8 +159,23 @@ def pack_linear(p: dict, lp=None, *, name: str | None = None) -> dict:
     if kern == "dense":
         return {"wd": (t * scale[..., None, :]).astype(p["w"].dtype)}
     tw = ternary.pack(t, scale)
-    return {"sign": tw.sign_plane, "zero": tw.zero_plane, "scale": tw.scale,
-            "density": ternary.ternary_density(t)}
+    out = {"sign": tw.sign_plane, "zero": tw.zero_plane, "scale": tw.scale,
+           "density": ternary.ternary_density(t)}
+    if sparse:
+        from repro.sparse import format as sparse_format
+
+        bk, bm = block_shape or sparse_format.DEFAULT_BLOCK_SHAPE
+        pbst = sparse_format.pad_from_ternary(
+            t.astype(jnp.int8), scale, bk=bk, bm=bm,
+            max_live=max_live, s_steps=s_steps)
+        out.update({
+            "sp_sign": pbst.sign_pool, "sp_zero": pbst.zero_pool,
+            "sp_map": pbst.block_map, "sp_kids": pbst.kids,
+            "sp_slots": pbst.slots, "sp_counts": pbst.counts,
+            "block_density": jnp.mean((pbst.occupancy > 0.0)
+                                      .astype(jnp.float32)),
+        })
+    return out
 
 
 # ---------------------------------------------------------------------------

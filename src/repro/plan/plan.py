@@ -248,12 +248,20 @@ jax.tree_util.register_pytree_node(
 # ---------------------------------------------------------------------------
 
 def _iter_bitlinear_layers(params, default_c: int):
-    """Yield (name, k, m, c, density, block_density) per BitLinear layer.
+    """Yield (name, k, m, c, density, block_density, sparse_ok, block_shape)
+    per BitLinear layer.
 
     Understands packed dicts (``layers.pack_linear`` / ``freeze_params``
     output), latent ``{'w'}`` dicts, and ``FrozenBitLinear`` tuples.  Stacked
     (scan-layer / expert) weights are one entry — every slice shares a shape
     and therefore a plan; the stamped density leaf is averaged.
+
+    ``sparse_ok`` is the subset of ``registry.SPARSE_KERNELS`` the layer's
+    stored formats can actually serve (a packed dict with ``sp_*`` padded
+    pool leaves supports ``tsar_sparse_padded`` only; a FrozenBitLinear
+    whatever sidecars it carries) and ``block_shape`` the format's tiling —
+    both feed ``select_kernel`` so a plan never commits to a sparse kernel
+    the layer cannot run, and costs it at the real block size.
     """
     import numpy as np
 
@@ -265,24 +273,41 @@ def _iter_bitlinear_layers(params, default_c: int):
                 k, m = ps[-2] * 8, ps[-1]
                 density = (float(np.mean(np.asarray(node["density"])))
                            if "density" in node else registry.DEFAULT_DENSITY)
-                yield (path, k, m, default_c, density, None)
+                block_density = None
+                sparse_ok: tuple = ()
+                block_shape = None
+                if "sp_sign" in keys:
+                    sparse_ok = ("tsar_sparse_padded",)
+                    sp = node["sp_sign"].shape
+                    block_shape = (sp[-2] * 8, sp[-1])
+                    if "block_density" in keys:
+                        block_density = float(
+                            np.mean(np.asarray(node["block_density"])))
+                yield (path, k, m, default_c, density, block_density,
+                       sparse_ok, block_shape)
                 return
             if keys == {"w"}:
                 from repro.core import ternary
                 k, m = node["w"].shape[-2:]
                 t, _ = ternary.absmean_ternarize(node["w"])
                 density = float(np.mean(np.asarray(ternary.ternary_density(t))))
-                yield (path, _pad8(k), m, default_c, density, None)
+                yield (path, _pad8(k), m, default_c, density, None, (), None)
                 return
             for key in sorted(node):
                 yield from walk(node[key], f"{path}/{key}" if path else str(key))
         elif hasattr(node, "packed") and hasattr(node, "c"):  # FrozenBitLinear
             k, m = node.shape
+            sparse_ok = tuple(kn for kn in registry.SPARSE_KERNELS
+                              if registry.get(kn).supports(node))
+            sidecar = node.sparse if node.sparse is not None \
+                else getattr(node, "padded", None)
             yield (path or "layer", _pad8(k), m, int(node.c),
                    float(node.density) if node.density is not None
                    else registry.DEFAULT_DENSITY,
                    float(node.block_density)
-                   if node.block_density is not None else None)
+                   if node.block_density is not None else None,
+                   sparse_ok,
+                   sidecar.block_shape if sidecar is not None else None)
 
     yield from walk(params, "")
 
@@ -302,15 +327,18 @@ def compile_plan(frozen_params, batch_profile: BatchProfile | None = None,
     profile = batch_profile or BatchProfile()
     shapes: dict[str, tuple[int, int, int]] = {}
     layers: dict[str, dict[int, LayerPlan]] = {}
-    for name, k, m, c, density, block_density in _iter_bitlinear_layers(
-            frozen_params, default_c):
+    for (name, k, m, c, density, block_density, sparse_ok,
+         block_shape) in _iter_bitlinear_layers(frozen_params, default_c):
         shapes[name] = (k, m, c)
+        kw: dict = {"sparse_ok": sparse_ok}
+        if block_density is not None:
+            kw["block_density"] = block_density
+        if block_shape is not None:
+            kw["block_shape"] = block_shape
         per_bucket: dict[int, LayerPlan] = {}
         for n in profile.buckets:
             choice = dataflow.select_kernel(
-                n=n, k=k, m=m, c=c, density=density,
-                **({} if block_density is None
-                   else {"block_density": block_density}))
+                n=n, k=k, m=m, c=c, density=density, **kw)
             per_bucket[n] = LayerPlan(
                 kernel=choice.kernel,
                 dataflow=choice.dataflow,

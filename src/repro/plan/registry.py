@@ -9,8 +9,9 @@ This module is the repo's single source of truth for what "a kernel" is:
   the shared roofline constants, a ``supports(frozen)`` capability gate, a
   ``tiles(n, k, m, c)`` default tile pick, and ``lower(frozen, x)`` — the
   actual computation on a frozen layer.
-* the five implementations (``tsar_mxu``, ``tsar_lut``, ``tsar_sparse``,
-  ``memory_lut``, ``dense``) registered declaratively at import time.
+* the six implementations (``tsar_mxu``, ``tsar_lut``, ``tsar_sparse``,
+  ``tsar_sparse_padded``, ``memory_lut``, ``dense``) registered
+  declaratively at import time.
 
 ``core/dataflow.select_kernel`` reduces to an argmin over the registry's
 ``selectable`` costs; ``core/bitlinear.apply_frozen`` reduces to
@@ -36,13 +37,17 @@ DEFAULT_DENSITY = 2.0 / 3.0
 # core/dataflow) as DEFAULT_BLOCK_SHAPE.
 SPARSE_BLOCK = (256, 256)
 
-# Issue-efficiency tax on the sparse kernel's live-block work: the
-# scalar-prefetched gather walks the pool non-sequentially (no streaming
-# prefetch), and strips with fewer live blocks than the grid's s_max still
-# burn masked steps.  Charged on compute and the weight stream, it puts the
-# analytic break-even near 1/1.1 ~ 0.9 live blocks instead of degenerately
-# at 1.0.
-SPARSE_ISSUE_TAX = 1.1
+# The issue-efficiency tax on the sparse kernels' live-block work lives in
+# ``repro.core.hw`` (SPARSE_ISSUE_TAX analytic default, overridable by the
+# bench_kernels --calibrate fit); cost models read it via
+# ``hw.sparse_issue_tax()``.  No alias here — this module sits below
+# repro.core in the import graph and a second literal would desynchronize;
+# ``core/dataflow`` re-exports the hw constant for back-compat.
+
+# The sparse kernel family.  select_kernel treats these specially (strict
+# improvement over the best dense kernel required) and planners restrict
+# them to the formats a layer actually carries.
+SPARSE_KERNELS = ("tsar_sparse", "tsar_sparse_padded")
 
 
 def _hw():
@@ -108,6 +113,15 @@ class KernelImpl(Protocol):
 
     name: str
     selectable: bool  # costed by select_kernel (baselines are not)
+    # Serve-path flag: when a plan names this kernel inside the jitted
+    # serving step (models.layers._packed_linear), should the step call this
+    # impl's lower() on the packed-dict leaves?  False for the dense T-SAR
+    # families, whose planes spelling inlined in _packed_linear IS their
+    # exact realization (and stays SPMD-shardable); True for kernels whose
+    # lowering genuinely differs (fp escape hatch, DRAM-LUT baseline,
+    # padded-pool sparse).  Declared here so the registry stays the single
+    # source of per-kernel dispatch knowledge.
+    serve_via_registry: bool
 
     def cost(self, n: int, k: int, m: int, c: int = 4,
              density: float = DEFAULT_DENSITY,
@@ -156,6 +170,7 @@ class TsarMXU:
 
     name = "tsar_mxu"
     selectable = True
+    serve_via_registry = False
 
     def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
              block_shape=SPARSE_BLOCK):
@@ -197,6 +212,7 @@ class TsarLUT:
 
     name = "tsar_lut"
     selectable = True
+    serve_via_registry = False
 
     def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
              block_shape=SPARSE_BLOCK):
@@ -247,6 +263,7 @@ class TsarSparse:
 
     name = "tsar_sparse"
     selectable = True
+    serve_via_registry = False
 
     def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
              block_shape=SPARSE_BLOCK):
@@ -254,6 +271,7 @@ class TsarSparse:
         index map (int32 per block) and per-strip gather lists are the
         sparsity tax, which is why the dense kernel wins at density ~ 1."""
         hw = _hw()
+        tax = hw.sparse_issue_tax()
         if block_density is None:
             block_density = estimate_block_density(density, block_shape)
         bk, bm = block_shape
@@ -261,10 +279,10 @@ class TsarSparse:
         live = block_density * kb * mb
         flops = 2.0 * n * bk * bm * live             # int8 MACs, live blocks only
         decode_ops = bk * bm * live * 4.0            # bitplane unpack, live only
-        compute = SPARSE_ISSUE_TAX * (
+        compute = tax * (
             flops / hw.PEAK_FLOPS_INT8 + decode_ops / (hw.PEAK_FLOPS_INT8 / 2))
         bytes_moved = (
-            SPARSE_ISSUE_TAX * live * bk * bm * 0.25  # 2-bit planes, live blocks
+            tax * live * bk * bm * 0.25              # 2-bit planes, live blocks
             + kb * mb * 4.0                          # block-index map (int32)
             + 2.0 * live * 4.0                       # kids+slots gather lists
             + n * k * 1.0                            # int8 activations
@@ -302,12 +320,103 @@ class TsarSparse:
         return _int8_dot(frozen, x32)
 
 
+def _padded_of(frozen, x):
+    """The layer's PaddedBlockSparseTernary: FrozenBitLinear carries the
+    object; packed-param dicts (``layers.pack_linear`` sparse output) rebuild
+    it from the ``sp_*`` leaves, taking the true K/M from activations and
+    scales (pool shapes store only the block-padded grid)."""
+    padded = _leaf(frozen, "padded")
+    if padded is not None:
+        return padded
+    from repro.sparse import format as sparse_format
+
+    sp = frozen["sp_sign"]
+    from repro.core import ternary as _t
+
+    bk, bm = sp.shape[-2] * _t.PACK, sp.shape[-1]
+    kb, mb = frozen["sp_map"].shape
+    return sparse_format.PaddedBlockSparseTernary(
+        sign_pool=sp, zero_pool=frozen["sp_zero"],
+        block_map=frozen["sp_map"],
+        occupancy=jnp.zeros((kb, mb), jnp.float32),  # telemetry; not stored
+        scale=frozen["scale"],
+        kids=frozen["sp_kids"], slots=frozen["sp_slots"],
+        counts=frozen["sp_counts"],
+        shape=(x.shape[-1], frozen["scale"].shape[-1]),
+        block_shape=(bk, bm),
+        max_live=sp.shape[0], s_steps=frozen["sp_kids"].shape[-1])
+
+
+class TsarSparsePadded(TsarSparse):
+    """2-D zero-skip matmul over a PADDED (static-shape, vmappable) pool.
+
+    Same live-block math as ``tsar_sparse``; the pool is padded to a static
+    ``max_live`` and the walk to a static ``s_steps``, so stacked scan-layer
+    weights carry per-layer pools through vmap — this is the sparse kernel
+    the SERVING path can actually plan and dispatch (compacted pools are
+    data-dependent and cannot ride a scanned params tree).
+    """
+
+    name = "tsar_sparse_padded"
+    selectable = True
+    serve_via_registry = True
+
+    def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
+             block_shape=SPARSE_BLOCK):
+        """Compacted cost + the pad-walk overhead: the static s_steps walk
+        issues its masked (dead) steps too, at a calibratable fraction of a
+        live block's compute.  Strictly above ``tsar_sparse`` at every
+        density — when both formats are present, the compacted pool wins."""
+        comp, mem = TsarSparse.cost(self, n, k, m, c, density=density,
+                                    block_density=block_density,
+                                    block_shape=block_shape)
+        hw = _hw()
+        if block_density is None:
+            block_density = estimate_block_density(density, block_shape)
+        bk, bm = block_shape
+        kb, mb = max(k / bk, 1.0), max(m / bm, 1.0)
+        dead = (1.0 - block_density) * kb * mb
+        per_block = (2.0 * n * bk * bm / hw.PEAK_FLOPS_INT8
+                     + bk * bm * 4.0 / (hw.PEAK_FLOPS_INT8 / 2))
+        comp += hw.sparse_pad_step_frac() * dead * per_block
+        return comp, mem
+
+    def supports(self, frozen):
+        if isinstance(frozen, dict):
+            sp = frozen.get("sp_sign")
+            return sp is not None and getattr(sp, "ndim", 0) == 3
+        return _leaf(frozen, "padded") is not None
+
+    def lower(self, frozen, x, *, use_pallas=None, interpret=None, lp=None):
+        pbst = _padded_of(frozen, x)
+        x32 = x.astype(jnp.float32)
+        if resolve_use_pallas(use_pallas, interpret):
+            from repro.kernels import ops
+
+            kw = {}
+            if lp is not None and lp.tile_sizes:
+                kw["bn"] = lp.tile_sizes[0]   # bk/bm are fixed by the format
+            return ops.tsar_sparse_padded_matmul(x32, pbst,
+                                                 interpret=interpret, **kw)
+        # Traceable spelling that decodes FROM THE POOL (so vmap-carried
+        # pools are load-bearing in the jitted serving step) then runs the
+        # exact int8 pipeline — bit-identical to the dense planes path
+        # because the padded pool round-trips the ternary matrix exactly.
+        from repro.core import lut, ternary
+        from repro.sparse import format as sparse_format
+
+        t = sparse_format.padded_to_ternary(pbst)
+        a_q, a_scale = ternary.quantize_activations(x32)
+        return lut.dense_int8_matmul(a_q, a_scale, t, pbst.scale)
+
+
 class MemoryLUT:
     """DRAM-resident 3^c-entry LUT gather — the bitnet.cpp-style baseline the
     paper beats; kept servable for A/B runs, never chosen by the planner."""
 
     name = "memory_lut"
     selectable = False
+    serve_via_registry = True
 
     def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
              block_shape=SPARSE_BLOCK):
@@ -348,6 +457,7 @@ class Dense:
 
     name = "dense"
     selectable = False
+    serve_via_registry = True
 
     def cost(self, n, k, m, c=4, density=DEFAULT_DENSITY, block_density=None,
              block_shape=SPARSE_BLOCK):
@@ -425,6 +535,7 @@ def candidate_costs(n: int, k: int, m: int, c: int = 4,
     }
 
 
-for _impl in (TsarMXU(), TsarLUT(), TsarSparse(), MemoryLUT(), Dense()):
+for _impl in (TsarMXU(), TsarLUT(), TsarSparse(), TsarSparsePadded(),
+              MemoryLUT(), Dense()):
     register(_impl)
 del _impl

@@ -32,6 +32,7 @@ Weight modes:
 """
 from __future__ import annotations
 
+import functools
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -75,17 +76,137 @@ class Request:
         return (self.t_done - self.t_first) / (len(self.out_tokens) - 1)
 
 
-def freeze_params(params) -> dict:
+def _measure_stack(w, block_shape: tuple) -> tuple[int, int, float]:
+    """Host-side occupancy measurement of one (possibly stacked) latent
+    weight: (stack-wide max live blocks, stack-wide max live per strip,
+    mean live-block fraction over slices).
+
+    This re-ternarizes (pack_linear ternarizes again inside the vmap — an
+    accepted freeze-time-only double cost; the vmapped construction cannot
+    see across the stack, so the bounds must be measured out here).
+    """
+    import numpy as np
+
+    from repro.core import ternary
+    from repro.sparse import stats as sparse_stats
+
+    bk, bm = block_shape
+    t, _ = ternary.absmean_ternarize(w)
+    tn = np.asarray(t, np.int8).reshape((-1,) + t.shape[-2:])
+    max_live = s_steps = 0
+    bds = []
+    for i in range(tn.shape[0]):
+        occ = sparse_stats.block_occupancy(tn[i], bk, bm)
+        live = occ > 0
+        max_live = max(max_live, int(live.sum()))
+        s_steps = max(s_steps, int(live.sum(axis=0).max()))
+        bds.append(float(live.mean()))
+    return max_live, s_steps, float(np.mean(bds)) if bds else 1.0
+
+
+def _sparse_prepass(w, block_shape: tuple, max_live: int | None = None,
+                    s_steps: int | None = None) -> dict | None:
+    """Sizing pass for ``sparse="auto"``: when the MEAN live-block fraction
+    over the stack sits below the freeze threshold, returns the pack_linear
+    kwargs that emit a padded pool sized to the STACK-WIDE maxima
+    (``max_live``/``s_steps`` must be uniform across the stack or the pools
+    can't ride a vmap/scan).  The mean is the same signal ``compile_plan``
+    costs with (the stamped ``block_density`` leaves, averaged) — a single
+    sparse outlier slice in an otherwise-dense stack must not stamp
+    near-full-grid pools the planner will never pick.  The gate is
+    ``SPARSE_SIDE_CAR_THRESHOLD`` (0.95), deliberately a notch ABOVE the
+    ~0.9 dispatch break-even — same rationale as the compacted sidecar at
+    freeze time: borderline layers keep the option (a plan recompiled with
+    a calibrated tax, or a different n-bucket profile, may cross the line),
+    while clearly-dense stacks don't carry dead pool bytes.  Caller-supplied
+    ``max_live``/``s_steps`` act as FLOORS on the measured values (to keep
+    ALL ``sp_*`` leaf shapes — pools and kids/slots schedules alike —
+    uniform across re-freezes for a saved plan).  Returns None when the
+    checkpoint is too dense to bother (pad slots would dominate).
+    """
+    from repro.core import bitlinear
+
+    measured_live, measured_steps, mean_bd = _measure_stack(w, block_shape)
+    if mean_bd >= bitlinear.SPARSE_SIDE_CAR_THRESHOLD:
+        return None
+    return {"sparse": True, "block_shape": block_shape,
+            "max_live": max(measured_live, max_live or 0, 1),
+            "s_steps": max(measured_steps, s_steps or 0, 1)}
+
+
+def freeze_params(params, *, sparse: str | bool = "auto",
+                  block_shape: tuple | None = None,
+                  max_live: int | None = None,
+                  s_steps: int | None = None) -> dict:
     """Pack every BitLinear latent weight to 2-bit planes (tree-wide).
 
     Stacked (scan-layer / expert) weights are packed with vmap over leading
     dims; dense fp leaves pass through untouched.
+
+    ``sparse`` controls the padded-pool sidecars (the serveable sparse
+    format — see ``repro.sparse.format.PaddedBlockSparseTernary``):
+
+    * ``"auto"`` (default) — on concrete weights, a host-side pre-pass
+      measures each layer's block occupancy and emits pools only for layers
+      below the freeze threshold, sized to the measured stack-wide
+      ``max_live``/``s_steps`` (tight pools, real memory savings);
+      caller-supplied ``max_live``/``s_steps`` act as floors (uniform
+      ``sp_*`` leaf shapes — pools AND schedules — across re-freezes).
+      Under tracing nothing is measurable, so no pools are emitted.
+    * ``True`` — always emit pools.  The pool pads to ``max_live`` and the
+      schedule to ``s_steps`` (full block grid / K-per-block when None) —
+      fully traceable, so ``freeze_params`` itself can run under
+      ``jit``/``eval_shape`` and the vmapped per-layer construction works
+      on stacked scan weights either way (this is "freeze emits padded
+      pools under tracing").  On concrete weights undersized bounds raise
+      (checked host-side — the vmap would otherwise silently drop live
+      blocks); under tracing the bounds are the caller's promise.
+    * ``False`` — planes only (PR 3 behavior).
     """
+    from repro.sparse import format as sparse_format
+
+    if sparse not in (True, False, "auto"):
+        # A typo ('Auto', 'true') silently freezing planes-only would leave
+        # the operator believing the sparse path is active — reject loudly,
+        # like hw.set_calibration does for unknown keys.
+        raise ValueError(
+            f"freeze_params: sparse={sparse!r} must be True, False, or "
+            "'auto'")
+    bshape = block_shape or sparse_format.DEFAULT_BLOCK_SHAPE
 
     def freeze_leafdict(node):
         if isinstance(node, dict) and set(node) == {"w"}:
             w = node["w"]
+            kw = {}
+            if sparse is True:
+                kw = {"sparse": True, "block_shape": bshape,
+                      "max_live": max_live, "s_steps": s_steps}
+                bounded = max_live is not None or s_steps is not None
+                if bounded and not isinstance(w, jax.core.Tracer):
+                    # The vmapped construction below traces even concrete
+                    # stacks, which silences format.py's undersized-bound
+                    # checks — enforce the caller's bounds host-side here so
+                    # an overflowing layer raises instead of silently
+                    # dropping live blocks.
+                    m_live, m_steps, _ = _measure_stack(w, bshape)
+                    if max_live is not None and m_live > max_live:
+                        raise ValueError(
+                            f"freeze_params: max_live={max_live} < {m_live}"
+                            f" live blocks in a {tuple(w.shape)} layer stack;"
+                            " pass a larger bound (or None for the full"
+                            " grid)")
+                    if s_steps is not None and m_steps > s_steps:
+                        raise ValueError(
+                            f"freeze_params: s_steps={s_steps} < {m_steps} "
+                            f"live blocks in the fullest strip of a "
+                            f"{tuple(w.shape)} layer stack; pass a larger "
+                            "bound (or None for K/bk)")
+            elif sparse == "auto" and not isinstance(w, jax.core.Tracer):
+                kw = _sparse_prepass(w, bshape, max_live=max_live,
+                                     s_steps=s_steps) or {}
             fn = layers.pack_linear
+            if kw:
+                fn = functools.partial(fn, **kw)
             for _ in range(w.ndim - 2):
                 fn = jax.vmap(fn)
             return fn({"w": w})
@@ -171,9 +292,13 @@ class ServingEngine:
                  prefill_chunk: int = 16, block_size: int = 16,
                  kv_blocks: int | None = None, policy: str | None = None,
                  profile_density: bool = True,
-                 plan: ModelPlan | None = None):
+                 plan: ModelPlan | None = None,
+                 sparse: str | bool = "auto",
+                 sparse_block: tuple | None = None):
         self.cfg = cfg
-        self.params = freeze_params(params) if packed else params
+        self.params = (freeze_params(params, sparse=sparse,
+                                     block_shape=sparse_block)
+                       if packed else params)
         self.max_len = max_len
         self.slots = batch_slots
         self.key = jax.random.PRNGKey(seed)

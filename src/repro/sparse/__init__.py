@@ -3,11 +3,18 @@
 * ``format`` — :class:`BlockSparseTernary`: (bk, bm)-tiled ternary weights
   with only live blocks' 2-bit bitplanes kept in a compacted pool, plus the
   block-index map the zero-skipping kernel walks.
+  :class:`PaddedBlockSparseTernary`: the static-shape (pool padded to
+  ``max_live``) variant whose construction is traceable and whose pytree is
+  vmappable — the format stacked scan-layer weights carry through the
+  serving path.
 * ``stats`` — per-layer / per-block density profiling over packed params.
 
-The matching Pallas kernel lives in ``repro.kernels.tsar_sparse`` (wrapper:
-``repro.kernels.ops.tsar_sparse_matmul``); the density-driven dispatch in
-``repro.core.dataflow.select_kernel``.
+The matching Pallas kernels live in ``repro.kernels.tsar_sparse`` (wrappers:
+``repro.kernels.ops.tsar_sparse_matmul`` / ``tsar_sparse_padded_matmul``);
+the density-driven dispatch in ``repro.core.dataflow.select_kernel``.
 """
 from repro.sparse import format, stats  # noqa: F401
-from repro.sparse.format import BlockSparseTernary  # noqa: F401
+from repro.sparse.format import (  # noqa: F401
+    BlockSparseTernary,
+    PaddedBlockSparseTernary,
+)

@@ -25,6 +25,7 @@ matrix / ``TernaryWeights`` is exact.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -234,6 +235,260 @@ def _strip_schedule_np(bmap: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.nda
 def strip_schedule(bst: BlockSparseTernary) -> tuple[jax.Array, jax.Array, jax.Array, int]:
     """The kernel schedule — precomputed at construction, returned as-is."""
     return bst.kids, bst.slots, bst.counts, bst.s_max
+
+
+# ---------------------------------------------------------------------------
+# Padded pool: the vmappable variant
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PaddedBlockSparseTernary:
+    """Block-sparse ternary weights with a STATIC-shaped (padded) pool.
+
+    :class:`BlockSparseTernary` compacts its pool to exactly ``n_live`` slots
+    — a data-dependent size, so stacked scan-layer / expert weights cannot
+    carry per-layer pools through ``vmap`` (every slice would need its own
+    array shape).  This variant pads the pool to a static per-model
+    ``max_live`` and the per-strip schedule to a static ``s_steps``:
+
+    * every array field's shape depends only on ``(K, M, bk, bm, max_live,
+      s_steps)`` — all static — so the format is a **vmappable pytree**
+      (arrays are children, the static metadata is aux data);
+    * pad slots decode to all-zero blocks (``zero_pool`` bits set), pad
+      schedule entries point at slot 0 and are masked by ``counts`` — both
+      contribute exactly nothing, so round-trips and matmuls stay exact;
+    * construction (:func:`pad_from_ternary`) is pure ``jnp`` — it runs
+      under ``vmap``/``jit`` tracing, which is how ``freeze_params`` emits
+      stacked padded pools for scan-layer weights.
+
+    The trade: pool bytes scale with ``max_live`` (an upper bound over the
+    stacked layers), not per-layer ``n_live`` — memory for vmappability.
+    ``max_live`` defaults to the full grid (always safe); freeze-time
+    callers that measured the checkpoint pass the stack-wide maximum.
+    """
+
+    sign_pool: jax.Array    # uint8 (max_live, bk//8, bm)
+    zero_pool: jax.Array    # uint8 (max_live, bk//8, bm)  pad slots = 0xFF
+    block_map: jax.Array    # int32 (kb, mb)  pool slot, -1 = dead block
+    occupancy: jax.Array    # f32   (kb, mb)  nonzero fraction per block
+    scale: jax.Array        # f32   (M,) per-output-channel dequant scale
+    kids: jax.Array         # int32 (mb, s_steps) live k-block ids per strip
+    slots: jax.Array        # int32 (mb, s_steps) matching pool slots
+    counts: jax.Array       # int32 (mb,) live blocks per strip
+    shape: tuple            # static logical (K, M)
+    block_shape: tuple      # static (bk, bm)
+    max_live: int           # static pool slots (>= any slice's n_live)
+    s_steps: int            # static per-strip walk extent (>= any s_max)
+
+    def tree_flatten(self):
+        children = (self.sign_pool, self.zero_pool, self.block_map,
+                    self.occupancy, self.scale, self.kids, self.slots,
+                    self.counts)
+        aux = (self.shape, self.block_shape, self.max_live, self.s_steps)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def k(self) -> int:
+        return self.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.shape[1]
+
+    @property
+    def grid(self) -> tuple:
+        bk, bm = self.block_shape
+        return (-(-self.shape[0] // bk), -(-self.shape[1] // bm))
+
+    @property
+    def n_live(self) -> jax.Array:
+        """Live blocks — DATA here (the static shape is ``max_live``)."""
+        return jnp.sum(self.counts)
+
+    @property
+    def block_density(self) -> jax.Array:
+        kb, mb = self.grid
+        return self.n_live / max(kb * mb, 1)
+
+    def nbytes(self) -> int:
+        """HBM bytes — static math; monotonic in ``max_live`` (pad slots are
+        the price of the static shape, whether or not they hold weights)."""
+        bk, bm = self.block_shape
+        kb, mb = self.grid
+        pool = 2 * self.max_live * (bk // ternary.PACK) * bm
+        sched = (2 * mb * self.s_steps + mb) * 4        # kids + slots + counts
+        return int(pool + sched + self.block_map.size * 4
+                   + self.occupancy.size * 4 + self.scale.size * 4)
+
+
+def pad_from_ternary(
+    t: jax.Array,
+    scale: jax.Array | None = None,
+    bk: int = DEFAULT_BK,
+    bm: int = DEFAULT_BM,
+    max_live: int | None = None,
+    s_steps: int | None = None,
+) -> PaddedBlockSparseTernary:
+    """Dense ternary (K, M) -> padded-pool block-sparse format.
+
+    Pure ``jnp`` (traceable: runs under ``vmap``/``jit``, unlike
+    :func:`from_ternary`).  ``max_live`` defaults to the full block grid and
+    ``s_steps`` to ``K/bk`` — always lossless.  A caller passing tighter
+    bounds promises they hold: on concrete arrays a violation raises; under
+    tracing the overflowing blocks (beyond ``max_live`` in raster order, or
+    beyond ``s_steps`` within a strip) are deterministically treated as
+    DEAD — dropped from the pool, the block map, AND the schedule, so every
+    consumer (the Pallas kernel, :func:`padded_to_ternary`, round-trips)
+    sees the same truncated matrix.  Consistent, but lossy.
+    """
+    if t.ndim != 2:
+        raise ValueError(f"pad_from_ternary expects (K, M), got {t.shape}")
+    if bk % ternary.PACK != 0:
+        raise ValueError(f"bk={bk} must be a multiple of {ternary.PACK}")
+    t8 = jnp.asarray(t, jnp.int8)
+    k, m = t8.shape
+    if scale is None:
+        scale = jnp.ones((m,), jnp.float32)
+    kb, mb = -(-k // bk), -(-m // bm)
+    grid_n = kb * mb
+    if max_live is None:
+        max_live = grid_n
+    max_live = max(int(max_live), 1)
+    if s_steps is None:
+        s_steps = kb
+    s_steps = max(min(int(s_steps), kb), 1)
+
+    pad_k, pad_m = kb * bk - k, mb * bm - m
+    if pad_k or pad_m:
+        t8 = jnp.pad(t8, ((0, pad_k), (0, pad_m)))
+    flat = t8.reshape(kb, bk, mb, bm).transpose(0, 2, 1, 3).reshape(
+        grid_n, bk, bm)
+    occ = jnp.count_nonzero(flat, axis=(1, 2)).astype(jnp.float32) / (bk * bm)
+    live_raw = occ > 0.0
+    slot = jnp.cumsum(live_raw.astype(jnp.int32)) - 1   # raster-order slot id
+    live = live_raw & (slot < max_live)
+    if not isinstance(flat, jax.core.Tracer):
+        n_live = int(jnp.sum(live_raw))
+        if n_live > max_live:
+            raise ValueError(
+                f"max_live={max_live} < {n_live} live blocks; pass a larger "
+                "pool (or None for the full grid)")
+
+    # Pack each block's 2-bit planes (same LSB-first layout as core/ternary).
+    shifts = jnp.arange(ternary.PACK, dtype=jnp.uint8).reshape(1, 1, -1, 1)
+    def _pack(bits):
+        b = bits.astype(jnp.uint8).reshape(
+            grid_n, bk // ternary.PACK, ternary.PACK, bm)
+        return jnp.sum(b << shifts, axis=2).astype(jnp.uint8)
+    sign_b = _pack(flat < 0)
+    zero_b = _pack(flat == 0)
+
+    # Scatter live blocks into the pool; dead blocks target the out-of-range
+    # index max_live and are dropped.  Pad slots keep the all-zero decode
+    # (zero_pool bits set).
+    idx = jnp.where(live, slot, max_live)
+    sign_pool = jnp.zeros((max_live, bk // ternary.PACK, bm), jnp.uint8
+                          ).at[idx].set(sign_b, mode="drop")
+    zero_pool = jnp.full((max_live, bk // ternary.PACK, bm), 0xFF, jnp.uint8
+                         ).at[idx].set(zero_b, mode="drop")
+
+    block_map = jnp.where(live, slot, -1).reshape(kb, mb).astype(jnp.int32)
+
+    # Static-width strip schedule: live k-blocks first (k order preserved by
+    # the stable sort), padded with (kid=0, slot=0) past counts[j] — a valid
+    # address the kernel masks, exactly like the compacted schedule's pad.
+    lv = block_map >= 0                                  # (kb, mb)
+    counts_full = jnp.sum(lv, axis=0).astype(jnp.int32)  # (mb,)
+    if not isinstance(flat, jax.core.Tracer):
+        s_max = int(jnp.max(counts_full)) if mb else 0
+        if s_max > s_steps:
+            raise ValueError(
+                f"s_steps={s_steps} < {s_max} live blocks in the fullest "
+                "strip; pass a larger s_steps (or None for K/bk)")
+    # Strip-overflow blocks (rank >= s_steps within their column) fall out
+    # of the truncated schedule; kill them in the MAP too so the jnp decode
+    # (padded_to_ternary) and the kernel's walk agree on the same matrix.
+    rank = jnp.cumsum(lv.astype(jnp.int32), axis=0) - 1  # live-first rank
+    block_map = jnp.where(lv & (rank >= s_steps), -1, block_map)
+    lv = block_map >= 0
+    order = jnp.argsort(jnp.logical_not(lv), axis=0, stable=True)
+    kids_full = order.T                                  # (mb, kb)
+    slots_full = jnp.take_along_axis(block_map, order, axis=0).T
+    counts = jnp.minimum(counts_full, s_steps)
+    valid = jnp.arange(s_steps)[None, :] < counts[:, None]
+    kids = jnp.where(valid, kids_full[:, :s_steps], 0).astype(jnp.int32)
+    slots = jnp.where(valid, slots_full[:, :s_steps], 0).astype(jnp.int32)
+
+    return PaddedBlockSparseTernary(
+        sign_pool=sign_pool, zero_pool=zero_pool, block_map=block_map,
+        occupancy=occ.reshape(kb, mb), scale=jnp.asarray(scale, jnp.float32),
+        kids=kids, slots=slots, counts=counts,
+        shape=(k, m), block_shape=(bk, bm),
+        max_live=max_live, s_steps=s_steps,
+    )
+
+
+def pad_from_packed(tw: ternary.TernaryWeights, bk: int = DEFAULT_BK,
+                    bm: int = DEFAULT_BM, max_live: int | None = None,
+                    s_steps: int | None = None) -> PaddedBlockSparseTernary:
+    """``TernaryWeights`` (dense 2-bit planes) -> padded block pool."""
+    return pad_from_ternary(ternary.unpack(tw), tw.scale, bk=bk, bm=bm,
+                            max_live=max_live, s_steps=s_steps)
+
+
+def pad_pool(bst: BlockSparseTernary, max_live: int | None = None,
+             s_steps: int | None = None) -> PaddedBlockSparseTernary:
+    """Compacted -> padded (host-side; sizes default to this matrix's own
+    ``n_live``/``s_max``, i.e. the tightest lossless pool)."""
+    if max_live is None:
+        max_live = max(bst.n_live, 1)
+    if s_steps is None:
+        s_steps = max(bst.s_max, 1)
+    bk, bm = bst.block_shape
+    return pad_from_ternary(to_ternary(bst), bst.scale, bk=bk, bm=bm,
+                            max_live=max_live, s_steps=s_steps)
+
+
+def compact(pbst: PaddedBlockSparseTernary) -> BlockSparseTernary:
+    """Padded -> compacted (host-side; exact)."""
+    bk, bm = pbst.block_shape
+    return from_ternary(padded_to_ternary(pbst), pbst.scale, bk=bk, bm=bm)
+
+
+def padded_to_ternary(pbst: PaddedBlockSparseTernary) -> jax.Array:
+    """Exact inverse of :func:`pad_from_ternary` -> dense (K, M) int8.
+
+    Pure ``jnp`` — this is also the serve-path realization of the padded
+    kernel off-TPU: decoding FROM THE POOL (not from dense planes) keeps the
+    padded format load-bearing inside the jitted step while staying
+    bit-identical to the dense decode (the pool round-trips exactly).
+    """
+    bk, bm = pbst.block_shape
+    kb, mb = pbst.grid
+    k, m = pbst.shape
+    slot = jnp.clip(pbst.block_map, 0, pbst.max_live - 1)
+    sp = jnp.take(pbst.sign_pool, slot, axis=0)      # (kb, mb, bk//8, bm)
+    zp = jnp.take(pbst.zero_pool, slot, axis=0)
+    shifts = jnp.arange(ternary.PACK, dtype=jnp.uint8).reshape(1, 1, 1, -1, 1)
+    sbits = ((sp[:, :, :, None, :] >> shifts) & jnp.uint8(1)
+             ).reshape(kb, mb, bk, bm).astype(jnp.int8)
+    zbits = ((zp[:, :, :, None, :] >> shifts) & jnp.uint8(1)
+             ).reshape(kb, mb, bk, bm).astype(jnp.int8)
+    vals = (1 - 2 * sbits) * (1 - zbits)
+    vals = vals * (pbst.block_map >= 0)[:, :, None, None].astype(jnp.int8)
+    dense = vals.transpose(0, 2, 1, 3).reshape(kb * bk, mb * bm)
+    return dense[:k, :m]
+
+
+def padded_to_packed(pbst: PaddedBlockSparseTernary) -> ternary.TernaryWeights:
+    """Exact round-trip back to dense ``TernaryWeights``."""
+    return ternary.pack(padded_to_ternary(pbst).astype(jnp.float32),
+                        pbst.scale)
 
 
 def random_block_sparse_ternary(

@@ -1,0 +1,155 @@
+"""Cross-kernel conformance suite: the kernel-equivalence contract.
+
+One parametrized harness asserting every kernel registered in
+``repro.plan.registry`` agrees on a shared grid of shapes x block densities
+x dtypes, through the same entry point serving uses
+(``bitlinear.apply_frozen(plan=<kernel>)``), in both realizations (Pallas
+interpret mode and the traceable jnp spelling).  This replaces the ad-hoc
+per-kernel equality checks that used to be scattered across
+``test_kernels.py`` / ``test_sparse.py``.
+
+The contract, per kernel, lives in ``KERNEL_CASES``:
+
+* ``exact=True`` — the int8-pipeline family (``tsar_mxu`` and the sparse
+  kernels): output BIT-IDENTICAL to the quantized int32-accumulation oracle
+  (``ref.quantized_matmul_ref``), and the Pallas kernel bit-identical to the
+  jnp spelling.  Zero-skipping (dead weight blocks, dead activation tiles)
+  must not change a single bit.
+* ``exact=False`` — the fp-math family (``tsar_lut``'s LUT identity,
+  ``memory_lut``'s DRAM gather, ``dense``'s dequantized matmul): tight
+  allclose against the fp oracle (``ref.ternary_matmul_ref``).
+
+``test_registry_has_conformance_row`` (unmarked — runs in the fast lane)
+pins the table to the registry: a kernel added without a conformance row
+fails it.  The grid itself is marked ``conformance`` and runs in its own CI
+lane (see ``.github/workflows/ci.yml``).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitlinear, ternary
+from repro.kernels import ref
+from repro.plan import registry
+from repro.sparse import format as sparse_format
+
+# kernel -> contract.  exact: bit-identical to the quantized int8 oracle
+# (and Pallas == jnp); pallas: the lowering binds a Pallas kernel off-TPU
+# under interpret=True.  EVERY registry kernel needs a row (enforced below).
+KERNEL_CASES = {
+    "tsar_mxu": dict(exact=True, pallas=True),
+    "tsar_lut": dict(exact=False, pallas=True),
+    "tsar_sparse": dict(exact=True, pallas=True),
+    "tsar_sparse_padded": dict(exact=True, pallas=True),
+    "memory_lut": dict(exact=False, pallas=False),
+    "dense": dict(exact=False, pallas=False),
+}
+
+# (n, k, m): one block-aligned shape, one ragged K/M (exercises zero-padded
+# plane tails, partial edge blocks, and LUT pad blocks).
+SHAPES = [(4, 256, 256), (3, 300, 200)]
+
+# Target LIVE-BLOCK fractions: empty pool, BitNet-ish, nearly dense, fully
+# dense (every block live, only unstructured zeros).
+DENSITIES = (0.0, 1.0 / 3.0, 0.95, 1.0)
+
+BK = BM = 128   # sparse tiling for the grid (small shapes)
+
+
+@functools.lru_cache(maxsize=None)
+def _case(shape, density):
+    """One frozen layer carrying EVERY kernel's encoding + an activation."""
+    n, k, m = shape
+    seed = int(n * 1009 + k * 13 + m * 7 + density * 997)
+    t = sparse_format.random_block_sparse_ternary(
+        jax.random.PRNGKey(seed), (k, m), bk=BK, bm=BM,
+        p_zero_block=1.0 - density)
+    scale = jax.random.uniform(jax.random.PRNGKey(seed + 1), (m,),
+                               minval=0.25, maxval=2.0)
+    idx_pos, idx_zero = ternary.pack_indices(t, 4)
+    fz = bitlinear.FrozenBitLinear(
+        packed=ternary.pack(t.astype(jnp.float32), scale),
+        idx_pos=idx_pos, idx_zero=idx_zero, c=4,
+        sparse=sparse_format.from_ternary(t, scale, bk=BK, bm=BM),
+        padded=sparse_format.pad_from_ternary(t, scale, bk=BK, bm=BM),
+        density=float(ternary.ternary_density(t)),
+        block_density=None,
+    )
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (n, k))
+    return fz, t, x
+
+
+def test_registry_has_conformance_row():
+    """A kernel registered without a conformance row fails here — the suite
+    IS the kernel-equivalence contract, so coverage is not optional."""
+    assert set(KERNEL_CASES) == set(registry.names()), (
+        "conformance table out of sync with plan/registry: "
+        f"missing rows {set(registry.names()) - set(KERNEL_CASES)}, "
+        f"stale rows {set(KERNEL_CASES) - set(registry.names())}")
+
+
+def test_every_kernel_supported_by_conformance_fixture():
+    """The fixture layer carries every encoding, so no kernel can silently
+    skip the grid via its supports() gate."""
+    fz, _, _ = _case(SHAPES[0], DENSITIES[1])
+    assert set(registry.available(fz)) == set(registry.names())
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("density", DENSITIES)
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
+@pytest.mark.parametrize("kernel", sorted(KERNEL_CASES))
+def test_kernel_conformance(kernel, shape, density):
+    spec = KERNEL_CASES[kernel]
+    fz, t, x = _case(shape, density)
+
+    exact_oracle = ref.quantized_matmul_ref(x, fz.packed)
+    fp_oracle = ref.ternary_matmul_ref(x, t, fz.packed.scale)
+
+    y_jnp = bitlinear.apply_frozen(fz, x, plan=kernel)
+    if spec["exact"]:
+        np.testing.assert_array_equal(np.asarray(y_jnp),
+                                      np.asarray(exact_oracle))
+    else:
+        np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(fp_oracle),
+                                   rtol=1e-4, atol=2e-3)
+
+    if spec["pallas"]:
+        y_pal = bitlinear.apply_frozen(fz, x, plan=kernel, interpret=True)
+        if spec["exact"]:
+            np.testing.assert_array_equal(np.asarray(y_pal),
+                                          np.asarray(y_jnp))
+        else:
+            np.testing.assert_allclose(np.asarray(y_pal),
+                                       np.asarray(fp_oracle),
+                                       rtol=1e-4, atol=2e-3)
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("kernel", sorted(KERNEL_CASES))
+def test_kernel_conformance_bf16(kernel):
+    """bf16 activations through every kernel — BOTH realizations (the jnp
+    spelling and, where bound, the Pallas interpret path): the int8 family
+    stays bit-identical to the oracle run through the same cast chain; the
+    fp family stays within bf16 tolerance."""
+    spec = KERNEL_CASES[kernel]
+    fz, t, x = _case(SHAPES[0], DENSITIES[1])
+    xb = x.astype(jnp.bfloat16)
+
+    realizations = [bitlinear.apply_frozen(fz, xb, plan=kernel)]
+    if spec["pallas"]:
+        realizations.append(
+            bitlinear.apply_frozen(fz, xb, plan=kernel, interpret=True))
+    for y in realizations:
+        assert y.dtype == jnp.bfloat16
+        if spec["exact"]:
+            want = ref.quantized_matmul_ref(xb, fz.packed).astype(jnp.bfloat16)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+        else:
+            want = ref.ternary_matmul_ref(xb, t, fz.packed.scale)
+            np.testing.assert_allclose(
+                np.asarray(y, np.float32), np.asarray(want, np.float32),
+                rtol=2e-2, atol=2e-1)

@@ -23,7 +23,8 @@ from repro.plan import (
 from repro.serving import Request, ServingEngine
 from repro.sparse import format as sparse_format
 
-SERVABLE = {"tsar_mxu", "tsar_lut", "tsar_sparse", "memory_lut", "dense"}
+SERVABLE = {"tsar_mxu", "tsar_lut", "tsar_sparse", "tsar_sparse_padded",
+            "memory_lut", "dense"}
 
 
 @pytest.fixture(scope="module")
@@ -52,7 +53,9 @@ class TestRegistry:
         """Every servable kernel name is registered and vice versa."""
         assert set(registry.names()) == SERVABLE
         assert set(registry.selectable_names()) == {
-            "tsar_mxu", "tsar_lut", "tsar_sparse"}
+            "tsar_mxu", "tsar_lut", "tsar_sparse", "tsar_sparse_padded"}
+        assert set(registry.SPARSE_KERNELS) == {
+            "tsar_sparse", "tsar_sparse_padded"}
 
     def test_every_registered_kernel_serves(self, frozen_layer,
                                             frozen_sparse_layer):
@@ -60,14 +63,18 @@ class TestRegistry:
         right shape through apply_frozen(plan=name)."""
         for frozen, x in (frozen_layer, frozen_sparse_layer):
             names = registry.available(frozen)
-            assert set(names) >= SERVABLE - {"tsar_sparse"}
+            assert set(names) >= SERVABLE - set(registry.SPARSE_KERNELS)
             for name in names:
                 y = bitlinear.apply_frozen(frozen, x, plan=name)
                 assert y.shape == x.shape[:-1] + (frozen.shape[1],), name
 
     def test_sparse_gated_by_sidecar(self, frozen_layer, frozen_sparse_layer):
         assert "tsar_sparse" not in registry.available(frozen_layer[0])
+        assert "tsar_sparse_padded" not in registry.available(frozen_layer[0])
         assert "tsar_sparse" in registry.available(frozen_sparse_layer[0])
+        # freeze emits the padded twin alongside the compacted pool
+        assert "tsar_sparse_padded" in registry.available(
+            frozen_sparse_layer[0])
 
     def test_unknown_kernel_raises(self, frozen_layer):
         fz, x = frozen_layer
@@ -489,3 +496,203 @@ class TestServingWithPlan:
         with pytest.warns(UserWarning, match="packed=False"):
             ServingEngine(cfg, params, max_len=48, batch_slots=2,
                           plan=base.plan)
+
+
+class TestSparseServing:
+    """The padded-pool sparse path through the serving loop: freeze emits
+    vmappable pools, the plan commits to ``tsar_sparse_padded``, and the
+    jitted step dispatches it with output token-identical to a dense plan."""
+
+    BK = 64   # reduced-config dims (128/256) need a finer grid than 256x256
+
+    @pytest.fixture(scope="class")
+    def sparse_model(self):
+        """Reduced bitnet checkpoint with ~half the (64, 64) weight blocks
+        structurally dead in every BitLinear layer.  Seeds derive from a
+        deterministic digest of the layer path (``hash()`` is randomized per
+        process) and the first block is force-killed so every layer is
+        guaranteed below the sparse threshold."""
+        import zlib
+
+        cfg = configs.get("bitnet-2b-4t").reduced()
+        params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+
+        def blockify(node, path=""):
+            if isinstance(node, dict):
+                if set(node) == {"w"}:
+                    w = node["w"]
+                    k, m = w.shape[-2:]
+                    seed = zlib.crc32(path.encode()) % 2**31
+                    mask = jnp.abs(sparse_format.random_block_sparse_ternary(
+                        jax.random.PRNGKey(seed), (k, m),
+                        bk=self.BK, bm=self.BK, p_zero_block=0.5,
+                        p_zero=0.0).astype(jnp.float32))
+                    mask = mask.at[:self.BK, :self.BK].set(0.0)
+                    return {"w": w * mask}
+                return {k2: blockify(v, f"{path}/{k2}")
+                        for k2, v in node.items()}
+            return node
+
+        return cfg, blockify(params)
+
+    def _reqs(self, n=3):
+        return [Request(uid=i, prompt=np.arange(4 + i) % 100, max_new_tokens=5)
+                for i in range(n)]
+
+    def test_freeze_params_emits_stacked_padded_pools(self, sparse_model):
+        """Acceptance: freeze_params on a stacked (vmapped) scan model emits
+        padded-pool sidecars — per-layer pools with UNIFORM static shapes,
+        sized by the host-side measurement pass."""
+        from repro.serving import freeze_params
+
+        cfg, params = sparse_model
+        packed = freeze_params(params, block_shape=(self.BK, self.BK))
+        wq = packed["blocks"]["attn"]["wq"]
+        assert {"sp_sign", "sp_zero", "sp_map", "sp_kids", "sp_slots",
+                "sp_counts", "block_density"} <= set(wq)
+        # stacked: leading dim = n_layers, pool dims shared across the stack
+        assert wq["sp_sign"].shape[0] == cfg.n_layers
+        assert wq["sp_sign"].shape[1:] == wq["sp_zero"].shape[1:]
+        # the measured pool is TIGHT: no larger than the full block grid
+        kb = -(-128 // self.BK)
+        mb = -(-128 // self.BK)
+        assert wq["sp_sign"].shape[1] <= kb * mb
+        assert float(np.mean(np.asarray(wq["block_density"]))) < 0.95
+
+    def test_freeze_params_emits_padded_pools_under_tracing(self, sparse_model):
+        """sparse=True freezes are fully traceable (static pool shapes), so
+        freeze_params can run under jit/eval_shape — no data-dependent
+        compaction on the trace path."""
+        from repro.serving import freeze_params
+
+        cfg, params = sparse_model
+        fn = lambda p: freeze_params(p, sparse=True,
+                                     block_shape=(self.BK, self.BK))
+        abstract = jax.eval_shape(fn, params)
+        wq = abstract["blocks"]["attn"]["wq"]
+        assert "sp_sign" in wq
+        concrete = jax.jit(fn)(params)
+        got = concrete["blocks"]["attn"]["wq"]["sp_sign"]
+        assert got.shape == wq["sp_sign"].shape
+
+    def test_sparse_plan_dispatches_padded_kernel(self, sparse_model,
+                                                  monkeypatch):
+        """Acceptance: the engine's compiled plan commits BitLinear layers to
+        ``tsar_sparse_padded``, serves through it in the jitted step with
+        ZERO select_kernel calls after init, and the output is
+        token-identical to a dense-plan engine on the same checkpoint."""
+        cfg, params = sparse_model
+        eng = ServingEngine(cfg, params, max_len=48, batch_slots=2,
+                            packed=True, sparse_block=(self.BK, self.BK))
+        counts = eng.plan.kernel_counts(1)
+        assert counts.get("tsar_sparse_padded", 0) > 0, counts
+
+        orig = dataflow.select_kernel
+        run_calls = {"n": 0}
+
+        def forbidden(*a, **kw):
+            run_calls["n"] += 1
+            return orig(*a, **kw)
+
+        monkeypatch.setattr(dataflow, "select_kernel", forbidden)
+        out_sparse = eng.run(self._reqs())
+        assert all(r.done for r in out_sparse)
+        assert run_calls["n"] == 0
+
+        # dense plan on the SAME packed checkpoint: pin every layer/bucket
+        # to tsar_mxu and compare tokens (the padded pool decodes to the
+        # same ternary matrix, so greedy decode must match bit-for-bit).
+        monkeypatch.setattr(dataflow, "select_kernel", orig)
+        dense_layers = {
+            name: {n: dataclasses.replace(lp, kernel="tsar_mxu")
+                   for n, lp in by_b.items()}
+            for name, by_b in eng.plan.layers.items()}
+        dense_plan = ModelPlan(buckets=eng.plan.buckets,
+                               shapes=dict(eng.plan.shapes),
+                               layers=dense_layers)
+        eng_dense = ServingEngine(cfg, params, max_len=48, batch_slots=2,
+                                  packed=True, sparse_block=(self.BK, self.BK),
+                                  plan=dense_plan)
+        out_dense = eng_dense.run(self._reqs())
+        for a, b in zip(out_sparse, out_dense):
+            assert a.out_tokens == b.out_tokens
+
+    def test_sparse_plan_json_roundtrip_serves_identically(self, sparse_model):
+        """The sparse-kernel plan survives to_json/from_json and serves the
+        same tokens (extends TestServingWithPlan's invariant)."""
+        cfg, params = sparse_model
+        eng = ServingEngine(cfg, params, max_len=48, batch_slots=2,
+                            packed=True, sparse_block=(self.BK, self.BK))
+        out_mem = eng.run(self._reqs())
+        plan = ModelPlan.from_json(eng.plan.to_json())
+        assert plan.kernel_counts(1).get("tsar_sparse_padded", 0) > 0
+        eng2 = ServingEngine(cfg, params, max_len=48, batch_slots=2,
+                             packed=True, sparse_block=(self.BK, self.BK),
+                             plan=plan)
+        out_json = eng2.run(self._reqs())
+        for a, b in zip(out_mem, out_json):
+            assert a.out_tokens == b.out_tokens
+
+    def test_sparse_false_keeps_planes_only(self, sparse_model):
+        from repro.serving import freeze_params
+
+        cfg, params = sparse_model
+        packed = freeze_params(params, sparse=False)
+        wq = packed["blocks"]["attn"]["wq"]
+        assert set(wq) == {"sign", "zero", "scale", "density"}
+
+    def test_outlier_slice_does_not_emit_pools(self):
+        """The auto pre-pass gates on the MEAN live-block fraction (the
+        planner's signal): one sparse outlier slice in a dense stack must
+        not stamp near-full-grid pools the plan would never dispatch."""
+        from repro.serving import freeze_params
+
+        k = m = 128
+        dense_w = jax.random.normal(jax.random.PRNGKey(40), (k, m)) * 0.1
+        sparse_w = dense_w * jnp.zeros((k, m)).at[:64, :64].set(1.0)
+        # 1 slice at bd=0.25 among 19 dense slices: mean ~ 0.96 >= 0.95
+        # threshold -> no pools, even though the outlier alone sits far
+        # below it.
+        stack = {"proj": {"w": jnp.stack([sparse_w] + [dense_w] * 19)}}
+        packed = freeze_params(stack, block_shape=(64, 64))
+        assert "sp_sign" not in packed["proj"]
+        # a uniformly sparse stack still emits
+        stack = {"proj": {"w": jnp.stack([sparse_w] * 4)}}
+        packed = freeze_params(stack, block_shape=(64, 64))
+        assert "sp_sign" in packed["proj"]
+
+    def test_unrecognized_sparse_value_raises(self, sparse_model):
+        """A typo'd sparse= must not silently freeze planes-only while the
+        operator believes the sparse path is active."""
+        from repro.serving import freeze_params
+
+        cfg, params = sparse_model
+        with pytest.raises(ValueError, match="sparse="):
+            freeze_params(params, sparse="Auto")
+
+    def test_undersized_max_live_raises_on_concrete_stack(self, sparse_model):
+        """sparse=True with a too-small bound must raise host-side — the
+        vmapped construction traces even concrete stacks, so without this
+        check live blocks would be silently dropped."""
+        from repro.serving import freeze_params
+
+        cfg, params = sparse_model
+        with pytest.raises(ValueError, match="max_live"):
+            freeze_params(params, sparse=True,
+                          block_shape=(self.BK, self.BK), max_live=1)
+
+    def test_auto_bound_floors_give_uniform_pools(self, sparse_model):
+        """Under sparse='auto' caller max_live/s_steps floor the measured
+        sizes, so re-freezes can keep EVERY sp_* leaf shape uniform (the
+        kids/slots schedules are shaped by s_steps, not just the pools)."""
+        from repro.serving import freeze_params
+
+        cfg, params = sparse_model
+        live_floor, step_floor = 7, 2
+        packed = freeze_params(params, block_shape=(self.BK, self.BK),
+                               max_live=live_floor, s_steps=step_floor)
+        for proj in ("wq", "wk", "wv", "wo"):
+            leaf = packed["blocks"]["attn"][proj]
+            if "sp_sign" in leaf:
+                assert leaf["sp_sign"].shape[1] >= live_floor
+                assert leaf["sp_kids"].shape[-1] >= step_floor
