@@ -121,7 +121,8 @@ def run(sizes=("125M", "2B-4T", "7B"), quick: bool = False):
     return rows
 
 
-def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False):
+def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False,
+                workload: str = "mixed"):
     """Serving-level latency under mixed prompt lengths: TTFT (admission +
     prefill), TPOT (decode cadence) and steady-state tokens/s, chunked
     prefill vs whole-prompt prefill, qat vs packed 2-bit weights.
@@ -129,7 +130,18 @@ def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False):
     The chunked engine's defining property shows up in ``max_step_tokens``:
     bounded by prefill_chunk + slots, where the whole-prompt policy spikes to
     the longest prompt length.
+
+    ``workload="shared-prefix"`` instead measures prefix-caching KV reuse:
+    N requests share a system prompt (~75% of each prompt), served with the
+    prefix cache off and on.  Rows/CSV carry ``prefix_hit_rate`` and the
+    TTFT columns, so the TTFT-vs-hit-rate relation is one CSV away; the
+    scenario doubles as the serving regression lane's smoke — it ASSERTS
+    cache-on outputs token-identical to cache-off.
     """
+    if workload == "shared-prefix":
+        return _run_serving_shared_prefix(arch, quick)
+    if workload != "mixed":
+        raise ValueError(f"unknown serving workload {workload!r}")
     import repro.configs as configs
     from repro.models import model_zoo as zoo
     from repro.serving import Request, ServingEngine
@@ -173,6 +185,59 @@ def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False):
     return rows
 
 
+def _run_serving_shared_prefix(arch: str, quick: bool = False):
+    """N requests sharing a system prompt, prefix cache off vs on."""
+    import repro.configs as configs
+    from repro.models import model_zoo as zoo
+    from repro.serving import Request, ServingEngine
+
+    chunk, slots, max_new = 16, 2, 8
+    n_req = 4 if quick else 6
+    sys_len, tail_len = 48, 16                      # 75%-shared prompts
+    cfg = configs.get(arch).reduced()
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=sys_len)
+    prompts = [np.concatenate([sys_prompt,
+                               rng.integers(0, cfg.vocab_size, size=tail_len)])
+               for _ in range(n_req)]
+    mk = lambda: [Request(uid=i, prompt=prompts[i], max_new_tokens=max_new)
+                  for i in range(n_req)]
+
+    rows, outs = [], {}
+    for prefix_cache in (False, True):
+        eng = ServingEngine(cfg, params, max_len=256, batch_slots=slots,
+                            packed=True, prefill_chunk=chunk,
+                            policy="chunked", prefix_cache=prefix_cache)
+        reqs = eng.run(mk())
+        lat = eng.latency_stats(reqs)
+        outs[prefix_cache] = [r.out_tokens for r in reqs]
+        hit_rate = eng.stats.get("prefix_hit_rate", 0.0)
+        plan_kernel = (eng.plan.dominant_kernel(slots)
+                       if eng.plan is not None else "none")
+        label = "cache" if prefix_cache else "nocache"
+        csv_row(f"serve_{arch}_sharedprefix_{label}",
+                lat["ttft_mean_s"] * 1e6,
+                f"ttft_max_ms={lat['ttft_max_s'] * 1e3:.1f};"
+                f"tpot_ms={lat['tpot_mean_s'] * 1e3:.2f};"
+                f"prefix_hit_rate={hit_rate:.3f};"
+                f"cached_blocks={eng.stats.get('cached_blocks', 0)};"
+                f"prefill_tokens={eng.stats['prefill_tokens']};"
+                f"plan_kernel={plan_kernel}")
+        rows.append({"workload": "shared-prefix", "prefix_cache": prefix_cache,
+                     "prefix_hit_rate": hit_rate,
+                     "cached_blocks": eng.stats.get("cached_blocks", 0),
+                     "prefill_tokens": eng.stats["prefill_tokens"],
+                     "plan_kernel": plan_kernel,
+                     "decode_tok_s": eng.throughput(), **lat})
+    # Serving regression contract: the hit path must be token-identical to
+    # the cold path on the same requests.
+    assert outs[True] == outs[False], \
+        "prefix-cache hit path diverged from cold path"
+    return rows
+
+
 if __name__ == "__main__":
     run()
     run_serving()
+    run_serving(workload="shared-prefix")

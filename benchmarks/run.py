@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows:
   bench_e2e      — Fig. 8  end-to-end prefill/decode, T-SAR vs baselines,
-                   + serving TTFT/TPOT (chunked-prefill engine, mixed prompts)
+                   + serving TTFT/TPOT (chunked-prefill engine, mixed prompts
+                   and the shared-prefix prefix-cache scenario)
   bench_memory   — Fig. 9  memory-request volume model (validated vs dry-run)
   bench_scaling  — Fig. 10 kernel microbench (paper shapes) + chip scaling
   bench_energy   — Table III decode throughput + energy/token
@@ -34,6 +35,18 @@ def main() -> None:
         assert rows, "run_serving produced no rows"
         missing = [r for r in rows if "plan_kernel" not in r]
         assert not missing, f"serving rows missing plan_kernel: {missing}"
+        # Prefix-cache contract: the shared-prefix workload must actually
+        # hit (a zero hit rate means lookup/registration rotted), and the
+        # scenario itself asserts cache-on == cache-off token identity.
+        shared = [r for r in rows if r.get("workload") == "shared-prefix"]
+        assert shared, "shared-prefix serving workload missing"
+        warm = [r for r in shared if r.get("prefix_cache")]
+        assert warm and all(r["prefix_hit_rate"] > 0 for r in warm), \
+            f"prefix cache never hit: {warm}"
+        cold = [r for r in shared if not r.get("prefix_cache")]
+        assert all(w["prefill_tokens"] < c["prefill_tokens"]
+                   for w in warm for c in cold), \
+            "prefix cache did not reduce scheduled prefill tokens"
         return rows
 
     suites = {
@@ -46,7 +59,10 @@ def main() -> None:
         "scaling": lambda: bench_scaling.run(quick=args.quick),
         "energy": lambda: bench_energy.run(quick=args.quick),
         "kernels": lambda: bench_kernels.run(quick=args.quick),
-        "serving": lambda: check_serving(bench_e2e.run_serving(quick=args.quick)),
+        "serving": lambda: check_serving(
+            bench_e2e.run_serving(quick=args.quick)
+            + bench_e2e.run_serving(quick=args.quick,
+                                    workload="shared-prefix")),
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

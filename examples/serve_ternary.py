@@ -33,6 +33,12 @@ def main():
     ap.add_argument("--policy", choices=["chunked", "whole"], default=None,
                     help="default: chunked where the family supports it")
     ap.add_argument("--no-packed", action="store_true")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable prefix-caching KV reuse (shared system "
+                         "prompts fork cached blocks instead of re-prefilling)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend an N-token shared system prompt to every "
+                         "request (demonstrates prefix-cache hits)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).reduced()
@@ -43,10 +49,11 @@ def main():
     lens = [6 + i % 5 if i % 3 else 3 * args.prefill_chunk + i for i in range(args.requests)]
     # max_len tracks the workload so large --prefill-chunk values don't push
     # the long prompts past the admission limit (finished-ignored).
-    max_len = max(128, max(lens, default=0) + args.max_new + 1)
+    max_len = max(128, max(lens, default=0) + args.shared_prefix + args.max_new + 1)
     engine = ServingEngine(cfg, params, max_len=max_len, batch_slots=args.slots,
                            packed=not args.no_packed,
-                           prefill_chunk=args.prefill_chunk, policy=args.policy)
+                           prefill_chunk=args.prefill_chunk, policy=args.policy,
+                           prefix_cache=args.prefix_cache)
     if engine.plan is not None:
         # Compile-once kernel plan (paper Sec. III-D / Fig. 5): the engine
         # costed every registered kernel per layer per n-bucket at init;
@@ -59,7 +66,11 @@ def main():
               f"live-block fraction {engine.density['block_density_mean']:.3f} "
               f"over {engine.density['layers']} BitLinear layers "
               f"(tsar_sparse break-even ~0.9; see docs/kernels.md)")
-    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=lens[i]),
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=args.shared_prefix)
+    reqs = [Request(uid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab_size, size=lens[i])]),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
@@ -80,6 +91,11 @@ def main():
           f"(budget {args.prefill_chunk} + {args.slots} slots) | "
           f"whole prefills {engine.stats['whole_prefills']} | "
           f"peak KV blocks {engine.stats['peak_kv_blocks']}/{engine.kv.num_blocks - 1}")
+    if engine.prefix is not None:
+        print(f"prefix cache: hit rate {engine.stats['prefix_hit_rate']:.2f} "
+              f"({engine.stats['prefix_hit_tokens']} prompt tokens reused) | "
+              f"{engine.stats['cached_blocks']} cached blocks | "
+              f"{engine.stats['prefix_evictions']} evictions")
 
 
 if __name__ == "__main__":

@@ -35,6 +35,10 @@ def main():
                     help="also write the engine's plan JSON here after init")
     ap.add_argument("--print-plan", action="store_true",
                     help="print the per-layer, per-bucket plan table")
+    ap.add_argument("--prefix-cache", nargs="?", const=True, default=False,
+                    type=int, metavar="CAPACITY_BLOCKS",
+                    help="enable prefix-caching KV reuse; optional value "
+                         "caps the cached-block footprint (LRU-evicted)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -48,7 +52,7 @@ def main():
               f"buckets {list(plan.buckets)})")
     engine = ServingEngine(cfg, params, max_len=args.max_len,
                            batch_slots=args.slots, packed=not args.no_packed,
-                           plan=plan)
+                           plan=plan, prefix_cache=args.prefix_cache)
     if engine.plan is not None:
         if plan is None and args.plan_file:
             engine.plan.save(args.plan_file)
@@ -77,6 +81,10 @@ def main():
           f"({'packed 2-bit' if not args.no_packed else 'latent fp'})")
     print(f"TTFT mean {lat['ttft_mean_s'] * 1e3:.0f}ms | "
           f"TPOT mean {lat['tpot_mean_s'] * 1e3:.2f}ms | policy={engine.policy}")
+    if engine.prefix is not None:
+        print(f"prefix cache: hit rate {engine.stats['prefix_hit_rate']:.2f} | "
+              f"{engine.stats['cached_blocks']} cached blocks | "
+              f"{engine.stats['prefix_evictions']} evictions")
 
 
 if __name__ == "__main__":

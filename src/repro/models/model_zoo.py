@@ -54,7 +54,9 @@ def decode_step(cfg, params, tokens, cache, t, train=False, plan=None):
 
 def chunk_step(cfg, params, tokens, pos, cache, lengths, train=False, plan=None):
     """Per-slot chunked-append step (paged serving engine): tokens/pos (B, C),
-    lengths (B,) per-slot write offsets.  See transformer.chunk_step."""
+    lengths (B,) per-slot write offsets.  A slot's first chunk may start at a
+    nonzero ``lengths[i]`` against a pre-populated block table (prefix-cache
+    fork).  See transformer.chunk_step."""
     with plan_runtime.activate(plan):
         return _mod(cfg).chunk_step(cfg, params, tokens, pos, cache, lengths,
                                     train)

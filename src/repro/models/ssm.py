@@ -118,15 +118,30 @@ def ssd_chunked(xd, a_dt, bmat, cmat, chunk: int, init_state=None):
     return y, final
 
 
-def ssm_forward(cfg, p: dict, u: jax.Array, train: bool = True):
-    """Full-sequence forward. u (B, S, D) -> (y (B, S, D), final_ssm_state)."""
+def ssm_forward(cfg, p: dict, u: jax.Array, train: bool = True, *,
+                initial_state: jax.Array | None = None,
+                initial_conv: jax.Array | None = None):
+    """Full-sequence forward. u (B, S, D) -> (y (B, S, D), final_ssm_state).
+
+    ``initial_state`` (B, H, P, N) seeds the SSD recurrence and
+    ``initial_conv`` (B, W-1, conv_dim) seeds the depthwise-conv window with
+    the PRE-activation xBC tail of the preceding segment (the same layout
+    the decode cache's ``conv`` leaf and ``_ssm_prefill_cache`` carry).
+    With both supplied, running a sequence in segments is exact: the outputs
+    and final state equal the unsegmented call (asserted in
+    ``tests/test_models.py::test_ssm_forward_initial_state_chunks_exactly``)
+    — the building block that lets SSM/hybrid families join chunked prefill.
+    Prefix-cache hits still cannot apply to state-carrying layers (an SSD
+    state is not block-addressable), so those families degrade to
+    ``cached_len = 0``; see docs/serving.md.
+    """
     b, s, _ = u.shape
     di, n, nh, conv_dim = _dims(cfg)
     hd = cfg.ssm_head_dim
 
     z, xs, bs, cs, dt = _split_in(cfg, layers.linear(p["in_proj"], u, train))
     xbc = jnp.concatenate([xs, bs, cs], axis=-1)                # (B,S,conv_dim)
-    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], init=initial_conv)
     xbc = layers.silu(xbc)
     xs, bs, cs = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
 
@@ -134,17 +149,29 @@ def ssm_forward(cfg, p: dict, u: jax.Array, train: bool = True):
     a = -jnp.exp(p["A_log"])                                    # (H,) negative
     xh = xs.reshape(b, s, nh, hd)
     xd = xh * dt[..., None]
-    y, final = ssd_chunked(xd, dt * a, bs, cs, min(cfg.ssm_chunk, s))
+    y, final = ssd_chunked(xd, dt * a, bs, cs, min(cfg.ssm_chunk, s),
+                           init_state=initial_state)
     y = y + xh * p["D"][None, None, :, None]
     y = y.reshape(b, s, di)
     y = layers.rmsnorm(p["norm"], y * layers.silu(z), cfg.norm_eps)
     return layers.linear(p["out_proj"], y, train), final
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
-    """Depthwise causal conv1d. x (B,S,C), w (W,C)."""
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 init: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d. x (B,S,C), w (W,C).  ``init`` (B,W-1,C)
+    replaces the zero left-padding with the previous segment's tail so
+    segmented runs continue the window exactly."""
     width = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    if init is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        if init.shape[1] != width - 1:
+            # A wrong-length tail would silently shift every conv window.
+            raise ValueError(
+                f"initial_conv carries {init.shape[1]} positions, need "
+                f"conv_width-1 = {width - 1}")
+        xp = jnp.concatenate([init.astype(x.dtype), x], axis=1)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width))
     return out + bias
 

@@ -289,8 +289,20 @@ def chunk_step(cfg, params, tokens, pos, cache: dict, lengths, train: bool = Fal
 
     Returns (logits (B, C, V), updated caches).  C == 1 reduces to a decode
     step with per-slot positions; C > 1 interleaves up to C prompt tokens of
-    a prefilling slot with the other slots' single decode tokens.  SSM/hybrid
-    recurrences only support C == 1 (their prefill goes through ``prefill``).
+    a prefilling slot with the other slots' single decode tokens.
+
+    A slot's FIRST chunk may start at a nonzero offset (``lengths[i] > 0``
+    with ``pos`` continuing from there) against a pre-populated cache — the
+    prefix-cache hit path, where the leading positions were forked from
+    another request's blocks: attention masks by absolute position
+    (``kpos <= pos``), so the chunk attends over the pre-populated prefix
+    exactly as if this slot had prefilled it (asserted in
+    ``tests/test_prefix_cache.py::test_chunk_step_accepts_nonzero_start``).
+
+    SSM/hybrid recurrences only support C == 1 (their prefill goes through
+    ``prefill``; ``ssm_lib.ssm_forward`` now takes ``initial_state`` /
+    ``initial_conv``, the building block for lifting this — engine wiring is
+    an open ROADMAP item).
     """
     if cfg.family in ("ssm", "hybrid"):
         assert tokens.shape[1] == 1, "SSM recurrence: chunked path is C == 1 only"

@@ -11,13 +11,17 @@ KV memory is a pool of fixed-size blocks reached through per-slot block
 tables (``kv_cache.PagedKVCache``), so resident cache bytes track live
 tokens, not ``slots * max_len``.
 
-The module splits three ways:
+The module splits four ways:
 
-* ``kv_cache.py``  — block pool, free-list allocator, per-slot block tables;
-* ``scheduler.py`` — admission + chunked-prefill step planning + preemption;
-* this file        — the ``ServingEngine``/``Request`` API, the jitted
-  gather -> model -> scatter step, sampling, and latency stats (per-request
-  TTFT/TPOT).
+* ``kv_cache.py``     — block pool, ref-counted free-list allocator, per-slot
+  block tables;
+* ``scheduler.py``    — admission + chunked-prefill step planning + preemption;
+* ``prefix_cache.py`` — block-granular radix tree over token-ID prefixes:
+  admitted prompts fork the cached leading blocks of an earlier request
+  instead of recomputing them (``ServingEngine(prefix_cache=True)``);
+* this file           — the ``ServingEngine``/``Request`` API, the jitted
+  gather -> model -> scatter step, sampling, prefix registration, and
+  latency stats (per-request TTFT/TPOT).
 
 Policies: ``chunked`` (default for dense/MoE attention families) interleaves
 prefill chunks with decode; ``whole`` prefills each admitted prompt in a
@@ -45,6 +49,7 @@ from repro.models import layers, model_zoo
 from repro.plan import BatchProfile, ModelPlan, compile_plan
 from repro.plan import runtime as plan_runtime
 from repro.serving.kv_cache import PagedKVCache
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import ChunkedScheduler, Preempt, SlotState
 
 
@@ -294,7 +299,8 @@ class ServingEngine:
                  profile_density: bool = True,
                  plan: ModelPlan | None = None,
                  sparse: str | bool = "auto",
-                 sparse_block: tuple | None = None):
+                 sparse_block: tuple | None = None,
+                 prefix_cache: bool | int = False):
         self.cfg = cfg
         self.params = (freeze_params(params, sparse=sparse,
                                      block_shape=sparse_block)
@@ -318,6 +324,20 @@ class ServingEngine:
         self.kv = PagedKVCache(cfg, batch_slots, max_len, block_size=block_size,
                                num_blocks=kv_blocks, dtype=cache_dtype)
         self.sched = ChunkedScheduler(prefill_chunk=prefill_chunk)
+        # Prefix-caching KV reuse (``serving.prefix_cache``): ``True`` turns
+        # it on, an int additionally caps the cached-block footprint (LRU
+        # evicted above it).  Reuse requires the chunked path (a prefill must
+        # be able to START at the fork boundary); for whole-prefill families
+        # — SSM/hybrid recurrences carry non-block state, enc-dec/VLM
+        # frontends carry non-token positions — hits cannot apply, so the
+        # config degrades gracefully to a disabled cache whose telemetry
+        # reports a 0.0 hit rate instead of refusing to serve.
+        self.prefix: PrefixCache | None = None
+        if prefix_cache and self.policy == "chunked":
+            cap = (prefix_cache
+                   if isinstance(prefix_cache, int)
+                   and not isinstance(prefix_cache, bool) else None)
+            self.prefix = PrefixCache(self.kv, capacity_blocks=cap)
         self._queue: list[Request] = []
         self._slots: list[SlotState | None] = [None] * batch_slots
         self.stats = {
@@ -326,6 +346,13 @@ class ServingEngine:
             "steps": 0, "whole_prefills": 0, "preemptions": 0,
             "peak_kv_blocks": 0, "max_step_tokens": 0,
         }
+        if prefix_cache:
+            # Keys exist whenever the cache was REQUESTED (including the
+            # whole-policy degrade, where they stay at zero) and never when
+            # it wasn't — a cache-off engine's stats are unchanged.
+            self.stats.update({"prefix_hit_rate": 0.0, "cached_blocks": 0,
+                               "prefix_hit_tokens": 0, "prefix_lookups": 0,
+                               "prefix_evictions": 0})
         # Density telemetry: measured once at init from the packed planes so
         # the sparse-dispatch signal is visible per deployment.  The profile
         # decodes one stacked layer slice at a time (bounded host transient)
@@ -407,12 +434,36 @@ class ServingEngine:
     def _admit(self):
         admitted = self.sched.admit(self._slots, self._queue, self.kv,
                                     extra_positions=self._extra,
-                                    reserve_full=self.policy == "whole")
+                                    reserve_full=self.policy == "whole",
+                                    prefix_cache=self.prefix)
         for i, st in admitted:
             if self.policy == "whole":
                 self._prefill_slot(i, st)
             # chunked: the scheduler interleaves this prompt's chunks with
-            # running decodes from the next step() on.
+            # running decodes from the next step() on; a prefix-cache hit
+            # already forked the cached leading blocks and advanced the
+            # slot's cursor to the fork boundary.
+
+    # -- prefix-cache registration -------------------------------------------
+
+    def _register_prefix(self, i: int, st: SlotState):
+        """Register slot ``i``'s current cache content with the prefix
+        cache.  The content is exactly ``req.prompt + out_tokens[:-1]``
+        truncated to the live length (the final sampled token is emitted but
+        its KV row is never written); only FULL blocks are registered, so a
+        later writer of the slot's partial tail block never mutates a cached
+        block."""
+        if self.prefix is None:
+            return
+        req = st.req
+        content = np.concatenate([np.asarray(req.prompt, np.int32),
+                                  np.asarray(req.out_tokens, np.int32)])
+        content = content[:int(self.kv.lengths[i])]
+        self.prefix.insert(content, self.kv.table[i])
+
+    def _sync_prefix_stats(self):
+        if self.prefix is not None:
+            self.stats.update(self.prefix.stats())
 
     def _prefill_slot(self, i: int, st: SlotState):
         """Whole-prompt prefill of one slot through the paged cache."""
@@ -462,6 +513,10 @@ class ServingEngine:
                 or self.kv.lengths[i] >= self.max_len - 1):
             req.done = True
             req.t_done = time.perf_counter()
+            # Register prompt + generated tokens (multi-turn reuse: a
+            # follow-up request quoting this conversation hits them) while
+            # the slot still holds its block references.
+            self._register_prefix(i, st)
             self.kv.free_slot(i)
             self._slots[i] = None
         else:
@@ -514,8 +569,15 @@ class ServingEngine:
             self.kv.lengths[i] += int(plan.n_real[i])
             if i == plan.prefill_slot:
                 st.cursor += int(plan.n_real[i])
+                if not st.prefilling:
+                    # Prompt fully in cache: register its full blocks NOW so
+                    # requests sharing this prefix hit it while this one is
+                    # still decoding (system-prompt sharing, the dominant
+                    # multi-tenant pattern).
+                    self._register_prefix(i, st)
             if plan.emit[i]:
                 self._emit_token(i, st, int(toks[i]))
+        self._sync_prefix_stats()
         return True
 
     def _preempt(self, i: int):

@@ -17,7 +17,17 @@ C == 1 — a pure decode step, exactly as cheap as the classic decode loop.
 The planner also reserves KV blocks with the :class:`PagedKVCache` allocator;
 if the pool cannot cover this step's growth it returns a :class:`Preempt`
 directive naming a victim (youngest admission first, vLLM's recompute-style
-preemption) instead of a plan.
+preemption) instead of a plan.  Preemption frees the victim THROUGH the
+refcount API (``kv.free_slot`` -> ``release``): blocks the victim forked
+from the prefix cache — or that the cache registered from the victim — are
+shared, and a direct free-list append would hand another request's live
+blocks to new writers.
+
+With a :class:`~repro.serving.prefix_cache.PrefixCache` attached (see
+``admit``), each admitted prompt starts its prefill at ``cached_len``: the
+fully-cached leading blocks are forked, the partial last block (and always
+at least the final prompt token) is recomputed, and the skipped tokens are
+accounted in both the admission block budget and the step token budget.
 """
 from __future__ import annotations
 
@@ -35,6 +45,7 @@ class SlotState:
     last_tok: int = 0                 # feeds the next decode step
     admitted_at: int = 0              # admission counter (preemption order)
     extra: int = 0                    # non-token cache positions (VLM patches)
+    cached_len: int = 0               # prompt tokens served by the prefix cache
 
     @property
     def prefilling(self) -> bool:
@@ -71,11 +82,18 @@ class Preempt:
 class ChunkedScheduler:
     prefill_chunk: int = 16
     _admissions: int = field(default=0, init=False)
+    # Cumulative planning telemetry: chunk-tokens actually scheduled for
+    # prefill vs prompt tokens the prefix cache served without scheduling.
+    # The acceptance contract for prefix caching is asserted against these —
+    # a warm cache must schedule strictly fewer prefill chunk-tokens.
+    prefill_tokens_planned: int = field(default=0, init=False)
+    cached_tokens_skipped: int = field(default=0, init=False)
 
     # -- admission -----------------------------------------------------------
 
     def admit(self, slots: list, queue: list, kv, extra_positions: int = 0,
-              reserve_full: bool = False) -> list[tuple[int, SlotState]]:
+              reserve_full: bool = False,
+              prefix_cache=None) -> list[tuple[int, SlotState]]:
         """Fill empty slots from the FIFO queue.
 
         ``reserve_full`` (whole-prefill policy) reserves the full prompt's KV
@@ -85,7 +103,17 @@ class ChunkedScheduler:
         here.  ``extra_positions`` are non-token cache positions every
         request carries (VLM patch tokens).  Returns the newly admitted
         (slot, state) pairs; the engine decides whether each prefills chunked
-        or whole."""
+        or whole.
+
+        ``prefix_cache`` (chunked policy only, and only when the request
+        carries no non-token positions — a cached block's absolute positions
+        must mean the same thing to every consumer): the longest cached
+        full-block prefix of the prompt is FORKED into the slot at
+        admission.  The slot starts with ``cached_len`` tokens already live
+        (``cursor`` advanced past them), so ``plan`` below schedules only
+        the uncached tail — cache hits are accounted in the admission block
+        budget (the gate shrinks by the forked prefix) and in the step token
+        budget (skipped tokens never occupy chunk width)."""
         admitted = []
         for i in range(len(slots)):
             if slots[i] is None:
@@ -101,8 +129,11 @@ class ChunkedScheduler:
                         queue.pop(0)
                         req.done = True
                         continue
+                    use_prefix = (prefix_cache is not None and not reserve_full
+                                  and extra_positions == 0)
+                    cached = prefix_cache.match(prompt)[0] if use_prefix else 0
                     gate = (total if reserve_full
-                            else min(total, self.prefill_chunk + 1))
+                            else min(total - cached, self.prefill_chunk + 1))
                     if not kv.can_allocate(gate):
                         # FIFO: don't let short requests starve long ones.
                         return admitted
@@ -112,6 +143,13 @@ class ChunkedScheduler:
                     self._admissions += 1
                     if reserve_full:
                         kv.ensure(i, total)
+                    if use_prefix:
+                        # Fork takes the block references and advances
+                        # kv.lengths; telemetry (hit/miss tokens) is counted
+                        # exactly once per admission inside fork().
+                        st.cached_len = prefix_cache.fork(i, prompt)
+                        st.cursor = st.cached_len
+                        self.cached_tokens_skipped += st.cached_len
                     slots[i] = st
                     admitted.append((i, st))
                     break
@@ -166,6 +204,7 @@ class ChunkedScheduler:
                 n_decode += 1
 
         needed = int(max(kv.lengths[i] for i in active)) + chunk
+        self.prefill_tokens_planned += n_prefill
         return StepPlan(tokens=tokens, pos=pos, lengths=lengths, n_real=n_real,
                         emit=emit, emit_idx=emit_idx, chunk=chunk,
                         view_blocks=kv.view_blocks(needed),

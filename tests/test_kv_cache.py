@@ -45,6 +45,39 @@ class TestAllocator:
         kv.free_slot(0)
         assert kv.ensure(1, 4)
 
+    def test_fork_release_refcounts(self, cfg):
+        """Shared blocks survive any one holder's free: fork takes a
+        reference per block, release returns a block to the free list only
+        when the LAST holder lets go."""
+        kv = PagedKVCache(cfg, slots=3, max_len=32, block_size=4)
+        assert kv.ensure(0, 8)                   # two exclusive blocks
+        blocks = [int(kv.table[0, j]) for j in range(2)]
+        assert all(kv.refcount[b] == 1 for b in blocks)
+        kv.fork_blocks(1, blocks)
+        kv.fork_blocks(2, blocks)
+        assert all(kv.refcount[b] == 3 for b in blocks)
+        free0 = kv.free_blocks
+        kv.free_slot(0)
+        kv.free_slot(2)
+        assert kv.free_blocks == free0           # slot 1 still holds them
+        assert all(kv.refcount[b] == 1 for b in blocks)
+        kv.check()
+        kv.free_slot(1)
+        assert kv.free_blocks == free0 + 2
+        kv.check()
+
+    def test_fork_into_occupied_slot_rejected(self, cfg):
+        kv = PagedKVCache(cfg, slots=2, max_len=32, block_size=4)
+        kv.ensure(0, 4)
+        kv.ensure(1, 4)
+        with pytest.raises(ValueError, match="non-empty"):
+            kv.fork_blocks(1, [int(kv.table[0, 0])])
+        kv.free_slot(1)
+        with pytest.raises(ValueError, match="unowned"):
+            kv.fork_blocks(1, [kv._free[-1]])    # free block: not forkable
+        with pytest.raises(ValueError, match="scratch"):
+            kv.release(0)
+
     def test_view_covers_chunk_past_max_len(self, cfg):
         kv = PagedKVCache(cfg, slots=2, max_len=32, block_size=4)
         vb = kv.view_blocks(32 + 16)     # near-full slot + chunk-wide write

@@ -77,6 +77,38 @@ def test_decode_matches_teacher_forcing(arch):
                                rtol=5e-3, atol=5e-3)
 
 
+def test_ssm_forward_initial_state_chunks_exactly():
+    """ROADMAP satellite: ``ssm_forward`` accepts an initial SSD state and
+    conv-window tail, so running a sequence in segments is exact — the
+    building block for chunked prefill on SSM/hybrid families."""
+    from repro.models import layers, ssm as ssm_lib
+
+    cfg = configs.get("mamba2-780m").reduced()
+    p = ssm_lib.init_ssm(jax.random.PRNGKey(1), cfg)
+    b, s, split = 2, 64, 32          # both halves multiples of ssm_chunk (16)
+    u = jax.random.normal(jax.random.PRNGKey(2), (b, s, cfg.d_model))
+
+    y_full, final_full = ssm_lib.ssm_forward(cfg, p, u, train=False)
+    y1, state1 = ssm_lib.ssm_forward(cfg, p, u[:, :split], train=False)
+    # Conv tail: pre-activation xBC of the first segment's last W-1 inputs
+    # (same recomputation _ssm_prefill_cache uses to seed decode).
+    w = cfg.ssm_conv_width
+    tail = u[:, split - (w - 1):split, :]
+    _, xs, bs, cs, _ = ssm_lib._split_in(
+        cfg, layers.linear(p["in_proj"], tail, train=False))
+    conv_tail = jnp.concatenate([xs, bs, cs], axis=-1)
+    y2, final_seg = ssm_lib.ssm_forward(
+        cfg, p, u[:, split:], train=False,
+        initial_state=state1, initial_conv=conv_tail)
+
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y_full[:, :split]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, split:]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final_seg), np.asarray(final_full),
+                               rtol=2e-4, atol=2e-4)
+
+
 @pytest.mark.parametrize("arch", ["deepseek-moe-16b", "llama4-maverick-400b-a17b"])
 def test_moe_decode_matches_teacher_forcing_dropless(arch):
     # Dropless capacity makes the comparison exact (capacity windows differ
