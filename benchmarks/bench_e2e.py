@@ -121,115 +121,103 @@ def run(sizes=("125M", "2B-4T", "7B"), quick: bool = False):
     return rows
 
 
+def _load_model(arch: str):
+    import repro.configs as configs
+    from repro.models import model_zoo as zoo
+
+    cfg = configs.get(arch).reduced()
+    return cfg, zoo.init_params(cfg, jax.random.PRNGKey(0))
+
+
 def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False,
                 workload: str = "mixed"):
-    """Serving-level latency under mixed prompt lengths: TTFT (admission +
-    prefill), TPOT (decode cadence) and steady-state tokens/s, chunked
-    prefill vs whole-prompt prefill, qat vs packed 2-bit weights.
+    """Serving-level latency, now trace-driven: the request list is a seeded
+    :class:`benchmarks.workloads.Trace` (``preset(workload)``) replayed in
+    virtual time, so the scheduling structure is reproducible from the trace
+    alone and the percentile TTFT/TPOT columns come from the shared metrics
+    layer.
 
-    The chunked engine's defining property shows up in ``max_step_tokens``:
-    bounded by prefill_chunk + slots, where the whole-prompt policy spikes to
-    the longest prompt length.
+    ``workload="mixed"`` keeps the historical comparison: chunked vs
+    whole-prompt prefill, qat vs packed 2-bit weights, over the same mixed
+    prompt-length burst.  The chunked engine's defining property shows up in
+    ``max_step_tokens``: bounded by prefill_chunk + slots, where the
+    whole-prompt policy spikes to the longest prompt length.
 
-    ``workload="shared-prefix"`` instead measures prefix-caching KV reuse:
-    N requests share a system prompt (~75% of each prompt), served with the
-    prefix cache off and on.  Rows/CSV carry ``prefix_hit_rate`` and the
-    TTFT columns, so the TTFT-vs-hit-rate relation is one CSV away; the
-    scenario doubles as the serving regression lane's smoke — it ASSERTS
-    cache-on outputs token-identical to cache-off.
+    ``workload="shared-prefix"`` measures prefix-caching KV reuse: the trace
+    shares system prompts across groups, replayed with the cache off and on.
+    Rows/CSV carry ``prefix_hit_rate`` next to the TTFT columns, and the
+    scenario ASSERTS cache-on outputs token-identical to cache-off (the
+    serving-regression contract).
     """
     if workload == "shared-prefix":
         return _run_serving_shared_prefix(arch, quick)
     if workload != "mixed":
         raise ValueError(f"unknown serving workload {workload!r}")
-    import repro.configs as configs
-    from repro.models import model_zoo as zoo
-    from repro.serving import Request, ServingEngine
+    from benchmarks.workloads import generator, runner
 
-    chunk, slots, max_new = 16, 4, 8 if quick else 16
-    cfg = configs.get(arch).reduced()
-    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    lens = [5, 9, 3 * chunk, 12, 6 * chunk, 7, 24, 4 * chunk]
-    mk = lambda: [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=s),
-                          max_new_tokens=max_new)
-                  for i, s in enumerate(lens[: 4 if quick else len(lens)])]
+    cfg, params = _load_model(arch)
+    spec = generator.preset("mixed", quick=quick)
+    trace = generator.generate(spec)
 
     rows = []
     for policy in ("chunked", "whole"):
         for packed in ((False, True) if not quick else (True,)):
-            eng = ServingEngine(cfg, params, max_len=256, batch_slots=slots,
-                                packed=packed, prefill_chunk=chunk,
-                                policy=policy)
-            reqs = eng.run(mk())
-            lat = eng.latency_stats(reqs)
-            # The decode-bucket kernel the compiled execution plan committed
-            # to (qat engines carry no plan): the CI smoke step asserts this
-            # column exists so the plan path can't silently fall out of the
-            # serving benchmark.  Pure-decode steps run (slots, 1) tokens, so
-            # the bucket the serving loop actually dispatches is n=slots.
-            plan_kernel = (eng.plan.dominant_kernel(slots)
-                           if eng.plan is not None else "none")
+            block, eng, reqs = runner.run_workload(
+                spec, cfg, params, packed=packed, policy=policy, trace=trace)
+            m, c = block["metrics"], block["counters"]
             name = f"serve_{arch}_{policy}_{'packed' if packed else 'qat'}"
-            csv_row(name, lat["ttft_mean_s"] * 1e6,
-                    f"ttft_max_ms={lat['ttft_max_s'] * 1e3:.1f};"
-                    f"tpot_ms={lat['tpot_mean_s'] * 1e3:.2f};"
-                    f"decode_tok_s={eng.throughput():.1f};"
-                    f"max_step_tokens={eng.max_step_tokens()};"
-                    f"peak_kv_blocks={eng.stats['peak_kv_blocks']};"
-                    f"plan_kernel={plan_kernel}")
-            rows.append({"policy": policy, "packed": packed, **lat,
-                         "plan_kernel": plan_kernel,
-                         "decode_tok_s": eng.throughput(),
-                         "max_step_tokens": eng.max_step_tokens()})
+            csv_row(name, m["ttft_s"]["p50"] * 1e6,
+                    f"ttft_p99_ms={m['ttft_s']['p99'] * 1e3:.1f};"
+                    f"tpot_p50_ms={m['tpot_s']['p50'] * 1e3:.2f};"
+                    f"out_tok_s={m['output_tok_s']:.1f};"
+                    f"max_step_tokens={c['max_step_tokens']};"
+                    f"peak_kv_blocks={c['peak_kv_blocks']};"
+                    f"plan_kernel={c['plan_kernel']}")
+            rows.append({"policy": policy, "packed": packed,
+                         "trace_fingerprint": block["trace_fingerprint"],
+                         "plan_kernel": c["plan_kernel"],
+                         "decode_tok_s": m["output_tok_s"],
+                         "ttft_p50_s": m["ttft_s"]["p50"],
+                         "ttft_p99_s": m["ttft_s"]["p99"],
+                         "tpot_p50_s": m["tpot_s"]["p50"],
+                         "max_step_tokens": c["max_step_tokens"],
+                         "prefill_tokens": c["prefill_tokens"]})
     return rows
 
 
 def _run_serving_shared_prefix(arch: str, quick: bool = False):
-    """N requests sharing a system prompt, prefix cache off vs on."""
-    import repro.configs as configs
-    from repro.models import model_zoo as zoo
-    from repro.serving import Request, ServingEngine
+    """The shared-prefix trace, prefix cache off vs on (same trace)."""
+    from benchmarks.workloads import generator, runner
 
-    chunk, slots, max_new = 16, 2, 8
-    n_req = 4 if quick else 6
-    sys_len, tail_len = 48, 16                      # 75%-shared prompts
-    cfg = configs.get(arch).reduced()
-    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    sys_prompt = rng.integers(0, cfg.vocab_size, size=sys_len)
-    prompts = [np.concatenate([sys_prompt,
-                               rng.integers(0, cfg.vocab_size, size=tail_len)])
-               for _ in range(n_req)]
-    mk = lambda: [Request(uid=i, prompt=prompts[i], max_new_tokens=max_new)
-                  for i in range(n_req)]
+    cfg, params = _load_model(arch)
+    spec = generator.preset("shared-prefix", quick=quick)
+    trace = generator.generate(spec)
 
     rows, outs = [], {}
     for prefix_cache in (False, True):
-        eng = ServingEngine(cfg, params, max_len=256, batch_slots=slots,
-                            packed=True, prefill_chunk=chunk,
-                            policy="chunked", prefix_cache=prefix_cache)
-        reqs = eng.run(mk())
-        lat = eng.latency_stats(reqs)
+        block, eng, reqs = runner.run_workload(
+            spec, cfg, params, trace=trace, prefix_cache=prefix_cache)
+        m, c = block["metrics"], block["counters"]
         outs[prefix_cache] = [r.out_tokens for r in reqs]
-        hit_rate = eng.stats.get("prefix_hit_rate", 0.0)
-        plan_kernel = (eng.plan.dominant_kernel(slots)
-                       if eng.plan is not None else "none")
+        hit_rate = c.get("prefix_hit_rate", 0.0)
         label = "cache" if prefix_cache else "nocache"
         csv_row(f"serve_{arch}_sharedprefix_{label}",
-                lat["ttft_mean_s"] * 1e6,
-                f"ttft_max_ms={lat['ttft_max_s'] * 1e3:.1f};"
-                f"tpot_ms={lat['tpot_mean_s'] * 1e3:.2f};"
+                m["ttft_s"]["p50"] * 1e6,
+                f"ttft_p99_ms={m['ttft_s']['p99'] * 1e3:.1f};"
+                f"tpot_p50_ms={m['tpot_s']['p50'] * 1e3:.2f};"
                 f"prefix_hit_rate={hit_rate:.3f};"
-                f"cached_blocks={eng.stats.get('cached_blocks', 0)};"
-                f"prefill_tokens={eng.stats['prefill_tokens']};"
-                f"plan_kernel={plan_kernel}")
+                f"cached_blocks={c.get('cached_blocks', 0)};"
+                f"prefill_tokens={c['prefill_tokens']};"
+                f"plan_kernel={c['plan_kernel']}")
         rows.append({"workload": "shared-prefix", "prefix_cache": prefix_cache,
+                     "trace_fingerprint": block["trace_fingerprint"],
                      "prefix_hit_rate": hit_rate,
-                     "cached_blocks": eng.stats.get("cached_blocks", 0),
-                     "prefill_tokens": eng.stats["prefill_tokens"],
-                     "plan_kernel": plan_kernel,
-                     "decode_tok_s": eng.throughput(), **lat})
+                     "cached_blocks": c.get("cached_blocks", 0),
+                     "prefill_tokens": c["prefill_tokens"],
+                     "plan_kernel": c["plan_kernel"],
+                     "ttft_p50_s": m["ttft_s"]["p50"],
+                     "tpot_p50_s": m["tpot_s"]["p50"],
+                     "decode_tok_s": m["output_tok_s"]})
     # Serving regression contract: the hit path must be token-identical to
     # the cold path on the same requests.
     assert outs[True] == outs[False], \

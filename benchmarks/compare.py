@@ -1,0 +1,184 @@
+"""Regression gate over persisted ``BENCH_e2e.json`` reports.
+
+``python -m benchmarks.compare RUN BASELINE [options]`` diffs a fresh run
+against a committed baseline and exits nonzero on regression, so CI can gate
+on the serving perf trajectory (see the ``bench`` lane in
+``.github/workflows/ci.yml`` and docs/benchmarking.md for the
+baseline-update workflow).
+
+Metrics are gated by class, not uniformly:
+
+* **deterministic counters** (preemptions, scheduled prefill tokens, cache
+  hit rates, step counts, plan kernel) are a pure function of (trace, code)
+  — compared EXACTLY by default (``--counter-tol`` relaxes to a relative
+  tolerance).  A counter drift means scheduling behavior changed, which is
+  either an intended change (update the baseline) or a real bug — never
+  machine noise.
+* **timing metrics** (TTFT/TPOT/queue percentiles, wall time, token rates)
+  are wall-clock — gated by a relative tolerance (``--timing-tol``,
+  default 0.15: flag anything >15% worse) with an absolute floor
+  (``--timing-floor``) so micro-jitter on sub-millisecond values doesn't
+  flake.  CI passes a looser tolerance than the default, since its machines
+  differ from whoever cut the baseline.
+* **goodput** (``slo_attained``) is gated by absolute drop
+  (``--goodput-tol``, default 0.1).
+
+Traces must match: a run whose ``trace_fingerprint`` differs from the
+baseline's is measuring a different workload, and its numbers are not
+comparable — that's an error unless ``--allow-trace-drift`` is passed
+(which skips the drifted workload with a note, for intentional workload
+redesigns).
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+
+from benchmarks.workloads import schema
+
+_PCT_KEYS = ("p50", "p90", "p99", "mean", "max")
+_LATENCY_BLOCKS = ("ttft_s", "tpot_s", "queue_s")
+
+
+def _worse_higher(run: float, base: float, tol: float, floor: float) -> bool:
+    """Higher-is-worse timing check with relative tolerance + abs floor."""
+    if math.isnan(run) or math.isnan(base):
+        return math.isnan(run) != math.isnan(base)
+    return run > base * (1.0 + tol) and (run - base) > floor
+
+
+def _worse_lower(run: float, base: float, tol: float) -> bool:
+    """Lower-is-worse (rates): flag when run < base by more than tol."""
+    if math.isnan(run) or math.isnan(base):
+        return math.isnan(run) != math.isnan(base)
+    return run < base * (1.0 - tol)
+
+
+def compare(run: dict, base: dict, *, timing_tol: float = 0.15,
+            timing_floor: float = 0.002, counter_tol: float = 0.0,
+            goodput_tol: float = 0.1,
+            allow_trace_drift: bool = False) -> list[str]:
+    """Returns a list of regression descriptions (empty = pass)."""
+    regs: list[str] = []
+    for doc, label in ((run, "run"), (base, "baseline")):
+        schema.validate(doc)
+    if run["schema_version"] != base["schema_version"]:
+        return [f"schema_version {run['schema_version']} != "
+                f"baseline {base['schema_version']} (not comparable)"]
+    if run["quick"] != base["quick"]:
+        return [f"quick={run['quick']} vs baseline quick={base['quick']} "
+                "(different suite sizes are not comparable)"]
+
+    for name, b in base["workloads"].items():
+        r = run["workloads"].get(name)
+        if r is None:
+            regs.append(f"{name}: workload missing from run "
+                        "(baseline still expects it)")
+            continue
+        if r["trace_fingerprint"] != b["trace_fingerprint"]:
+            msg = (f"{name}: trace fingerprint drifted "
+                   f"({r['trace_fingerprint'][:18]}… != "
+                   f"{b['trace_fingerprint'][:18]}…)")
+            if allow_trace_drift:
+                print(f"note: {msg} — skipped", file=sys.stderr)
+                continue
+            regs.append(msg + " — numbers not comparable "
+                        "(--allow-trace-drift to skip)")
+            continue
+
+        rm, bm = r["metrics"], b["metrics"]
+        for blk in _LATENCY_BLOCKS:
+            for k in _PCT_KEYS:
+                rv, bv = rm[blk][k], bm[blk][k]
+                if _worse_higher(rv, bv, timing_tol, timing_floor):
+                    regs.append(
+                        f"{name}: {blk}.{k} regressed "
+                        f"{bv * 1e3:.2f}ms -> {rv * 1e3:.2f}ms "
+                        f"(+{(rv / bv - 1) * 100:.0f}% > "
+                        f"{timing_tol * 100:.0f}%)")
+            if rm[blk]["n"] < bm[blk]["n"]:
+                regs.append(f"{name}: {blk}.n fell "
+                            f"{bm[blk]['n']} -> {rm[blk]['n']} "
+                            "(fewer measured requests)")
+        rg, bg = rm["goodput"], bm["goodput"]
+        if not math.isnan(bg["slo_attained"]):
+            if rg["slo_attained"] < bg["slo_attained"] - goodput_tol:
+                regs.append(
+                    f"{name}: goodput fell {bg['slo_attained']:.2f} -> "
+                    f"{rg['slo_attained']:.2f} (drop > {goodput_tol})")
+        if _worse_lower(rm["output_tok_s"], bm["output_tok_s"], timing_tol):
+            regs.append(f"{name}: output_tok_s fell "
+                        f"{bm['output_tok_s']:.1f} -> "
+                        f"{rm['output_tok_s']:.1f}")
+
+        rc, bc = r["counters"], b["counters"]
+        for k, bv in bc.items():
+            if k not in rc:
+                regs.append(f"{name}: counter {k} missing from run")
+                continue
+            rv = rc[k]
+            if isinstance(bv, str):
+                if rv != bv:
+                    regs.append(f"{name}: counter {k} changed "
+                                f"{bv!r} -> {rv!r}")
+            elif counter_tol > 0:
+                lo = min(bv * (1 - counter_tol), bv - 1e-12)
+                hi = max(bv * (1 + counter_tol), bv + 1e-12)
+                if not (lo <= rv <= hi):
+                    regs.append(f"{name}: counter {k} drifted {bv} -> {rv} "
+                                f"(> {counter_tol * 100:.0f}%)")
+            elif rv != bv:
+                regs.append(f"{name}: counter {k} changed {bv} -> {rv} "
+                            "(deterministic counters gate exactly; "
+                            "intended? update the baseline)")
+    return regs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff a BENCH_e2e.json run against a baseline; "
+                    "exit 1 on regression.")
+    ap.add_argument("run", help="fresh BENCH_e2e.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--timing-tol", type=float, default=0.15,
+                    help="relative tolerance for wall-clock metrics "
+                         "(default 0.15)")
+    ap.add_argument("--timing-floor", type=float, default=0.002,
+                    help="absolute regression floor in seconds "
+                         "(default 2ms)")
+    ap.add_argument("--counter-tol", type=float, default=0.0,
+                    help="relative tolerance for deterministic counters "
+                         "(default 0 = exact)")
+    ap.add_argument("--goodput-tol", type=float, default=0.1,
+                    help="max allowed absolute goodput drop (default 0.1)")
+    ap.add_argument("--allow-trace-drift", action="store_true",
+                    help="skip (don't fail) workloads whose trace "
+                         "fingerprint changed")
+    args = ap.parse_args(argv)
+
+    try:
+        run = schema.load(args.run)
+        base = schema.load(args.baseline)
+    except (OSError, ValueError) as e:
+        print(f"compare: cannot load reports: {e}", file=sys.stderr)
+        return 2
+    regs = compare(run, base, timing_tol=args.timing_tol,
+                   timing_floor=args.timing_floor,
+                   counter_tol=args.counter_tol,
+                   goodput_tol=args.goodput_tol,
+                   allow_trace_drift=args.allow_trace_drift)
+    if regs:
+        print(f"REGRESSIONS ({len(regs)}):")
+        for r in regs:
+            print(f"  - {r}")
+        return 1
+    nw = len(base["workloads"])
+    print(f"compare: OK — {nw} baseline workloads within tolerance "
+          f"(run rev {run['git_rev'][:12]}, "
+          f"baseline rev {base['git_rev'][:12]})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_energy   — Table III decode throughput + energy/token
   bench_kernels  — Pallas kernel interpret-mode timings (small shapes)
 
-``python -m benchmarks.run [--quick]``
+The ``serving`` suite additionally runs the trace-driven workload harness
+(``benchmarks.workloads``) over the full preset taxonomy — steady / bursty /
+shared-prefix / decode-heavy / preemption-storm / eviction-pressure — and
+persists the schema-validated percentile + goodput + counter report to
+``--out`` (default ``BENCH_e2e.json``).  ``benchmarks/compare.py`` diffs
+that report against a committed baseline for CI regression gating; see
+docs/benchmarking.md.
+
+``python -m benchmarks.run [--quick] [--only SUITE] [--out PATH] [--seed N]``
 """
 from __future__ import annotations
 
@@ -23,6 +31,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "e2e", "memory", "scaling", "energy", "kernels",
                              "serving"])
+    ap.add_argument("--out", default="BENCH_e2e.json", metavar="PATH",
+                    help="where the serving suite writes its BENCH_e2e "
+                         "report (default: %(default)s)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload-generation seed for the serving suite "
+                         "(part of every trace's identity)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -49,6 +63,22 @@ def main() -> None:
             "prefix cache did not reduce scheduled prefill tokens"
         return rows
 
+    def serving():
+        # Policy/weight-format comparison rows (mixed + shared-prefix traces)
+        # feed the CSV; the workload suite then runs the full preset taxonomy
+        # and persists the regression-gated BENCH_e2e report.
+        from benchmarks.workloads import runner, schema
+
+        check_serving(
+            bench_e2e.run_serving(quick=args.quick)
+            + bench_e2e.run_serving(quick=args.quick,
+                                    workload="shared-prefix"))
+        report = runner.run_suite(quick=args.quick, seed=args.seed)
+        schema.save(report, args.out)
+        print(f"# serving report: {args.out} "
+              f"({len(report['workloads'])} workloads, seed {args.seed})",
+              file=sys.stderr)
+
     suites = {
         "memory": lambda: bench_memory.run(quick=args.quick),
         # 7B+ excluded by default: the memory-LUT *baseline* needs ~6 GB/gather
@@ -59,10 +89,7 @@ def main() -> None:
         "scaling": lambda: bench_scaling.run(quick=args.quick),
         "energy": lambda: bench_energy.run(quick=args.quick),
         "kernels": lambda: bench_kernels.run(quick=args.quick),
-        "serving": lambda: check_serving(
-            bench_e2e.run_serving(quick=args.quick)
-            + bench_e2e.run_serving(quick=args.quick,
-                                    workload="shared-prefix")),
+        "serving": serving,
     }
     for name, fn in suites.items():
         if args.only and name != args.only:

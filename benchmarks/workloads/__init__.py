@@ -1,0 +1,31 @@
+"""Trace-driven workload harness for the serving benchmarks.
+
+Layers (each its own module, composable from tests and drivers):
+
+* ``trace``     — :class:`Trace` / :class:`TraceRequest`: the seeded,
+  replayable, canonically-serialized request sequence (+ fingerprint);
+* ``generator`` — :class:`WorkloadSpec` + :func:`generate`: arrival
+  processes, length distributions, shared-prefix mixes, and the named
+  preset taxonomy (including adversarial traces);
+* ``metrics``   — percentile TTFT/TPOT/queue, goodput under per-request
+  SLOs, deterministic engine counters;
+* ``runner``    — virtual-time replay against ``ServingEngine`` and the
+  ``run_suite`` driver that assembles ``BENCH_e2e.json``;
+* ``schema``    — the versioned report schema, validator, canonical IO.
+
+See ``docs/benchmarking.md`` for the taxonomy and the regression-gating
+workflow (``benchmarks/compare.py``).
+"""
+from benchmarks.workloads.generator import (  # noqa: F401
+    WORKLOADS,
+    WorkloadSpec,
+    generate,
+    preset,
+)
+from benchmarks.workloads.runner import (  # noqa: F401
+    build_engine,
+    replay,
+    run_suite,
+    run_workload,
+)
+from benchmarks.workloads.trace import Trace, TraceRequest  # noqa: F401

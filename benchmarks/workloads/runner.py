@@ -1,0 +1,199 @@
+"""Trace replay against the serving engine + the benchmark suite driver.
+
+``replay`` drives a :class:`~repro.serving.ServingEngine` step-by-step in
+**virtual time**: one engine step advances the clock by ``step_dt`` units,
+and every trace request whose arrival time has passed is submitted before
+the next step.  The scheduling structure (who queues behind whom, when
+admission happens relative to running decodes) is therefore a pure function
+of the trace — wall-clock enters only through the measured latencies, so
+two runs of the same trace are structurally identical and their
+deterministic counters (preemptions, scheduled prefill tokens, hit rates)
+must match exactly.
+
+``run_suite`` runs the named workload set (``generator.WORKLOADS``) and
+assembles the persisted ``BENCH_e2e.json`` report.  It also enforces the
+serving-regression contracts inline, so a rotted benchmark fails loudly
+instead of producing a plausible report:
+
+* shared-prefix replayed cache-on AND cache-off must be token-identical,
+  with a nonzero hit rate and strictly fewer scheduled prefill tokens warm;
+* the preemption storm must actually preempt (and, with the prefix cache
+  on, reuse preempted partial prefills at re-admission);
+* eviction pressure must actually evict;
+* every workload's counters carry the execution plan's kernel choice.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.workloads import generator, metrics, schema
+from benchmarks.workloads.generator import WorkloadSpec, generate, preset
+from benchmarks.workloads.trace import Trace
+
+DEFAULT_ARCH = "bitnet-2b-4t"
+
+
+def build_engine(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
+                 policy: str | None = None, prefix_cache=None):
+    """Construct a ServingEngine from a workload spec's engine hints.
+    ``prefix_cache`` overrides the spec hint (the cache-off control
+    replay)."""
+    from repro.serving import ServingEngine
+
+    e = spec.engine
+    if prefix_cache is None:
+        prefix_cache = e.get("prefix_cache", False)
+    return ServingEngine(
+        cfg, params,
+        max_len=e.get("max_len", 128),
+        batch_slots=e.get("slots", 4),
+        packed=packed,
+        prefill_chunk=e.get("prefill_chunk", 16),
+        block_size=e.get("block_size", 16),
+        kv_blocks=e.get("kv_blocks"),
+        policy=policy,
+        prefix_cache=prefix_cache)
+
+
+def replay(engine, trace: Trace, *, step_dt: float = 1.0,
+           warmup: bool = True) -> tuple[list, float]:
+    """Replay ``trace`` through ``engine``; returns (requests, wall_s).
+
+    Requests are returned in trace (uid) order with latency stamps filled.
+    ``warmup`` pre-compiles the jitted step paths on a throwaway request
+    (and resets counters), so percentiles measure steady-state serving, not
+    XLA compile time — pass False to measure cold-start behavior.
+    """
+    from repro.serving import Request
+
+    order = sorted(trace.requests, key=lambda t: (t.arrival, t.uid))
+    by_uid = {}
+    reqs = []
+    for t in order:
+        r = Request(uid=t.uid, prompt=np.asarray(t.prompt, np.int32),
+                    max_new_tokens=t.max_new_tokens,
+                    temperature=t.temperature)
+        reqs.append(r)
+        by_uid[t.uid] = r
+    if warmup:
+        longest = max((len(t.prompt) + t.max_new_tokens for t in order),
+                      default=0)
+        engine.warmup(seq_len=longest)
+
+    vt, i, n = 0.0, 0, len(reqs)
+    t0 = time.perf_counter()
+    while i < n or engine.busy:
+        while i < n and order[i].arrival <= vt + 1e-9:
+            engine.submit(reqs[i])
+            i += 1
+        if not engine.step():
+            if engine.queue_len:
+                # Mirrors ServingEngine.run(): the pool can never cover the
+                # head-of-queue request — a workload/engine config error.
+                raise RuntimeError(
+                    f"trace {trace.name!r}: request cannot be admitted on an "
+                    "idle engine; check the spec's kv_blocks/max_len hints")
+            if i < n:
+                vt = max(vt, order[i].arrival)   # idle gap: jump to arrival
+                continue
+        vt += step_dt
+    wall = time.perf_counter() - t0
+    return [by_uid[t.uid] for t in trace.requests], wall
+
+
+def run_workload(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
+                 policy: str | None = None, prefix_cache=None,
+                 warmup: bool = True, trace: Trace | None = None):
+    """Generate (or take) the trace, replay it, and return
+    ``(report_block, engine, requests)``."""
+    trace = generate(spec) if trace is None else trace
+    engine = build_engine(spec, cfg, params, packed=packed, policy=policy,
+                          prefix_cache=prefix_cache)
+    reqs, wall = replay(engine, trace, warmup=warmup)
+    block = {
+        "spec": spec.to_dict(),
+        "trace_fingerprint": trace.fingerprint(),
+        "metrics": metrics.latency_metrics(reqs, trace, wall),
+        "counters": metrics.engine_counters(engine),
+    }
+    return block, engine, reqs
+
+
+def _emit_csv(name: str, block: dict) -> None:
+    m = block["metrics"]
+    c = block["counters"]
+    csv_row(
+        f"serve_wl_{name}", m["ttft_s"]["p50"] * 1e6,
+        f"ttft_p99_ms={m['ttft_s']['p99'] * 1e3:.1f};"
+        f"tpot_p50_ms={m['tpot_s']['p50'] * 1e3:.2f};"
+        f"tpot_p99_ms={m['tpot_s']['p99'] * 1e3:.2f};"
+        f"goodput={m['goodput']['slo_attained']:.2f};"
+        f"out_tok_s={m['output_tok_s']:.1f};"
+        f"preemptions={c['preemptions']};"
+        f"prefix_hit_rate={c.get('prefix_hit_rate', 0.0):.3f};"
+        f"prefill_tokens={c['prefill_tokens']};"
+        f"plan_kernel={c['plan_kernel']}")
+
+
+SUITE = ("steady", "bursty", "shared-prefix", "decode-heavy",
+         "preemption-storm", "eviction-pressure")
+
+
+def run_suite(*, quick: bool = False, seed: int = 0,
+              arch: str = DEFAULT_ARCH, names=SUITE) -> dict:
+    """Run the workload suite and return the schema-valid report document."""
+    import jax
+
+    import repro.configs as configs
+    from repro.models import model_zoo as zoo
+
+    cfg = configs.get(arch).reduced()
+    params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+
+    blocks: dict = {}
+    for name in names:
+        spec = preset(name, quick=quick, seed=seed)
+        trace = generate(spec)
+        print(f"#   workload {name}: {trace.n_requests} requests, "
+              f"{trace.total_prompt_tokens()} prompt tokens", file=sys.stderr)
+        block, engine, reqs = run_workload(spec, cfg, params, trace=trace)
+        blocks[name] = block
+        _emit_csv(name, block)
+
+        if name == "shared-prefix":
+            # Serving-regression contract: the same trace with the cache off
+            # must be token-identical, schedule strictly more prefill work,
+            # and the warm run must actually hit.
+            cold, cold_eng, cold_reqs = run_workload(
+                spec, cfg, params, trace=trace, prefix_cache=False)
+            blocks["shared-prefix-cold"] = cold
+            _emit_csv("shared-prefix-cold", cold)
+            for a, b in zip(reqs, cold_reqs):
+                assert a.out_tokens == b.out_tokens, (
+                    f"prefix-cache hit path diverged from cold path "
+                    f"(uid {a.uid})")
+            warm_c, cold_c = block["counters"], cold["counters"]
+            assert warm_c.get("prefix_hit_rate", 0.0) > 0, \
+                f"prefix cache never hit: {warm_c}"
+            assert warm_c["prefill_tokens"] < cold_c["prefill_tokens"], \
+                "prefix cache did not reduce scheduled prefill tokens"
+        elif name == "preemption-storm":
+            c = block["counters"]
+            assert c["preemptions"] > 0, \
+                f"preemption storm did not preempt: {c}"
+            # Preempted partial prefills are registered into the prefix
+            # cache, so recompute-readmission must reuse full blocks.
+            assert c["cached_tokens_skipped"] > 0, \
+                f"preempted prefills were not reused at re-admission: {c}"
+        elif name == "eviction-pressure":
+            c = block["counters"]
+            assert c.get("prefix_evictions", 0) > 0, \
+                f"eviction pressure never evicted: {c}"
+
+    return schema.make_report(arch=cfg.name, seed=seed, quick=quick,
+                              workloads=blocks,
+                              created_unix=time.time())

@@ -1,0 +1,169 @@
+"""Versioned schema for the persisted serving benchmark report
+(``BENCH_e2e.json``) — the on-disk perf trajectory.
+
+One report = one run of the trace-driven serving suite: git revision, seed,
+config, and a per-workload block of percentile metrics + deterministic
+counters + the trace fingerprint that produced them.  Reports are written in
+**canonical JSON** (sorted keys, fixed separators) so load -> validate ->
+dump is byte-exact (pinned by ``tests/test_bench_report.py``) and diffs
+between commits are minimal.
+
+The validator is hand-rolled (no jsonschema dependency on this container):
+:func:`validate` walks the document against the structural spec below and
+raises ``ValueError`` naming the offending path.  ``schema_version`` bumps
+on any shape change; the comparator refuses cross-version diffs.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+
+SCHEMA_VERSION = 1
+KIND = "BENCH_e2e"
+
+_PCT_KEYS = ("p50", "p90", "p99", "mean", "max", "n")
+_GOODPUT_KEYS = ("slo_attained", "good", "total", "good_per_s")
+_REQUIRED_COUNTERS = (
+    "steps", "preemptions", "preempt_readmissions", "prefill_tokens",
+    "prefill_tokens_planned", "cached_tokens_skipped", "decode_tokens",
+    "total_tokens", "max_step_tokens", "peak_kv_blocks", "whole_prefills",
+    "plan_kernel",
+)
+_TOP_KEYS = ("schema_version", "kind", "git_rev", "created_unix", "quick",
+             "seed", "arch", "workloads")
+
+
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def make_report(*, arch: str, seed: int, quick: bool, workloads: dict,
+                created_unix: float | None = None,
+                rev: str | None = None) -> dict:
+    """Assemble a schema-valid report document from per-workload blocks."""
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "kind": KIND,
+        "git_rev": git_rev() if rev is None else rev,
+        "created_unix": 0.0 if created_unix is None else float(created_unix),
+        "quick": bool(quick),
+        "seed": int(seed),
+        "arch": arch,
+        "workloads": workloads,
+    }
+    validate(doc)
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def _fail(path: str, msg: str):
+    raise ValueError(f"BENCH_e2e schema: {path}: {msg}")
+
+
+def _need(d: dict, keys, path: str):
+    for k in keys:
+        if k not in d:
+            _fail(path, f"missing key {k!r}")
+
+
+def _num(v, path: str):
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        _fail(path, f"expected number, got {type(v).__name__}")
+
+
+def _pct_block(d, path: str):
+    if not isinstance(d, dict):
+        _fail(path, "expected percentile block (dict)")
+    _need(d, _PCT_KEYS, path)
+    for k in _PCT_KEYS:
+        _num(d[k], f"{path}.{k}")
+
+
+def validate(doc: dict) -> dict:
+    """Structural validation; returns ``doc`` unchanged on success."""
+    if not isinstance(doc, dict):
+        _fail("$", "expected object")
+    _need(doc, _TOP_KEYS, "$")
+    if doc["schema_version"] != SCHEMA_VERSION:
+        _fail("$.schema_version",
+              f"{doc['schema_version']!r} != {SCHEMA_VERSION}")
+    if doc["kind"] != KIND:
+        _fail("$.kind", f"{doc['kind']!r} != {KIND!r}")
+    if not isinstance(doc["git_rev"], str):
+        _fail("$.git_rev", "expected string")
+    _num(doc["created_unix"], "$.created_unix")
+    if not isinstance(doc["quick"], bool):
+        _fail("$.quick", "expected bool")
+    if not isinstance(doc["seed"], int) or isinstance(doc["seed"], bool):
+        _fail("$.seed", "expected int")
+    if not isinstance(doc["arch"], str):
+        _fail("$.arch", "expected string")
+    wl = doc["workloads"]
+    if not isinstance(wl, dict) or not wl:
+        _fail("$.workloads", "expected non-empty object")
+    for name, blk in wl.items():
+        p = f"$.workloads.{name}"
+        if not isinstance(blk, dict):
+            _fail(p, "expected object")
+        _need(blk, ("spec", "trace_fingerprint", "metrics", "counters"), p)
+        if not isinstance(blk["spec"], dict):
+            _fail(f"{p}.spec", "expected object")
+        fp = blk["trace_fingerprint"]
+        if not (isinstance(fp, str) and fp.startswith("sha256:")):
+            _fail(f"{p}.trace_fingerprint", f"malformed fingerprint {fp!r}")
+        m = blk["metrics"]
+        if not isinstance(m, dict):
+            _fail(f"{p}.metrics", "expected object")
+        _need(m, ("ttft_s", "tpot_s", "queue_s", "goodput", "output_tok_s",
+                  "wall_s"), f"{p}.metrics")
+        for lk in ("ttft_s", "tpot_s", "queue_s"):
+            _pct_block(m[lk], f"{p}.metrics.{lk}")
+        g = m["goodput"]
+        if not isinstance(g, dict):
+            _fail(f"{p}.metrics.goodput", "expected object")
+        _need(g, _GOODPUT_KEYS, f"{p}.metrics.goodput")
+        for k in _GOODPUT_KEYS:
+            _num(g[k], f"{p}.metrics.goodput.{k}")
+        _num(m["output_tok_s"], f"{p}.metrics.output_tok_s")
+        _num(m["wall_s"], f"{p}.metrics.wall_s")
+        c = blk["counters"]
+        if not isinstance(c, dict):
+            _fail(f"{p}.counters", "expected object")
+        _need(c, _REQUIRED_COUNTERS, f"{p}.counters")
+        for k in _REQUIRED_COUNTERS:
+            if k == "plan_kernel":
+                if not isinstance(c[k], str):
+                    _fail(f"{p}.counters.plan_kernel", "expected string")
+            else:
+                _num(c[k], f"{p}.counters.{k}")
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# canonical IO
+# ---------------------------------------------------------------------------
+
+def dumps(doc: dict) -> str:
+    """Canonical serialization (sorted keys, fixed separators, trailing
+    newline) — the byte-exact round-trip form."""
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"),
+                      allow_nan=True) + "\n"
+
+
+def save(doc: dict, path: str) -> None:
+    validate(doc)
+    with open(path, "w") as f:
+        f.write(dumps(doc))
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return validate(json.load(f))

@@ -63,8 +63,10 @@ class Request:
     done: bool = False
     # -- latency stats (stamped by the engine) --
     t_submit: float | None = None
+    t_admit: float | None = None  # first admission into a slot
     t_first: float | None = None
     t_done: float | None = None
+    n_preempted: int = 0          # recompute-preemptions suffered
 
     @property
     def ttft(self) -> float | None:
@@ -72,6 +74,13 @@ class Request:
         if self.t_submit is None or self.t_first is None:
             return None
         return self.t_first - self.t_submit
+
+    @property
+    def queue_s(self) -> float | None:
+        """Submit -> first admission into a slot (s)."""
+        if self.t_submit is None or self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
 
     @property
     def tpot(self) -> float | None:
@@ -437,6 +446,10 @@ class ServingEngine:
                                     reserve_full=self.policy == "whole",
                                     prefix_cache=self.prefix)
         for i, st in admitted:
+            if st.req.t_admit is None:
+                # First admission only: queueing latency measures the wait
+                # for a slot, not re-admission churn after preemption.
+                st.req.t_admit = time.perf_counter()
             if self.policy == "whole":
                 self._prefill_slot(i, st)
             # chunked: the scheduler interleaves this prompt's chunks with
@@ -582,17 +595,37 @@ class ServingEngine:
 
     def _preempt(self, i: int):
         """Recompute-style preemption (vLLM): return the youngest request to
-        the queue head; its prompt + generated tokens re-prefill later."""
+        the queue head; its prompt + generated tokens re-prefill later.
+
+        Before the victim's blocks are released, its already-computed FULL
+        blocks are registered into the prefix cache (when one is attached):
+        the blocks exist and are correct whether or not the prefill ever
+        finished, so recompute-preemption's re-admission forks them back and
+        re-prefills only the partial tail — preempting a request no longer
+        throws away the prefill work it already paid for (the cached blocks
+        stay evictable, so under real pressure the allocator can still
+        reclaim them before any live request is preempted)."""
         st = self._slots[i]
+        self._register_prefix(i, st)
         self.kv.free_slot(i)
         self._slots[i] = None
         self._queue.insert(0, st.req)
         self.stats["preemptions"] += 1
+        st.req.n_preempted += 1
+
+    @property
+    def busy(self) -> bool:
+        """True while any request is queued or resident in a slot."""
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
 
     def run(self, requests: list[Request]) -> list[Request]:
         for r in requests:
             self.submit(r)
-        while self._queue or any(s is not None for s in self._slots):
+        while self.busy:
             if not self.step() and self._queue:
                 # Every slot is free yet the head-of-queue request still
                 # failed the admission gate: the pool can never cover it.
@@ -602,6 +635,51 @@ class ServingEngine:
                     f"{self.kv.block_size}) smaller than the admission gate; "
                     "raise kv_blocks or lower prefill_chunk/max_len")
         return requests
+
+    # -- benchmarking hooks ---------------------------------------------------
+
+    def warmup(self, seq_len: int | None = None) -> None:
+        """Compile the jitted step paths (prefill-chunk width, pure decode,
+        and the block-table view buckets up to ``seq_len`` total positions)
+        on a throwaway request, then :meth:`reset_run_stats` — so benchmark
+        percentiles measure steady-state serving rather than XLA compile
+        time.  Must be called on an idle engine."""
+        if self.busy:
+            raise RuntimeError("warmup() requires an idle engine")
+        total = seq_len or (self.prefill_chunk + 3)
+        # Leave room for the generated tokens + the headroom position.
+        plen = max(2, min(total - 2, self.max_len - self._extra - 3))
+        rng = np.random.default_rng(0x7e57)
+        prompt = rng.integers(0, self.cfg.vocab_size, size=plen,
+                              dtype=np.int32)
+        self.run([Request(uid=-1, prompt=prompt, max_new_tokens=2)])
+        self.reset_run_stats()
+
+    def reset_run_stats(self) -> None:
+        """Zero the per-run counters and drop any prefix-cache state, keeping
+        init-time telemetry (plan/density keys).  Requires an idle engine;
+        used by the workload runner after :meth:`warmup`."""
+        if self.busy:
+            raise RuntimeError("reset_run_stats() requires an idle engine")
+        for k in ("prefill_s", "decode_s"):
+            self.stats[k] = 0.0
+        for k in ("decode_tokens", "total_tokens", "prefill_tokens", "steps",
+                  "whole_prefills", "preemptions", "peak_kv_blocks",
+                  "max_step_tokens"):
+            self.stats[k] = 0
+        self.sched.prefill_tokens_planned = 0
+        self.sched.cached_tokens_skipped = 0
+        self.sched.readmissions = 0
+        if self.prefix is not None:
+            # All slots are free, so every cached block is evictable; a
+            # fresh tree also resets the hit/miss telemetry.
+            self.prefix.evict(self.prefix.cached_blocks)
+            self.prefix = PrefixCache(self.kv,
+                                      capacity_blocks=self.prefix.capacity)
+        if "prefix_hit_rate" in self.stats:
+            self.stats.update({"prefix_hit_rate": 0.0, "cached_blocks": 0,
+                               "prefix_hit_tokens": 0, "prefix_lookups": 0,
+                               "prefix_evictions": 0})
 
     # -- metrics --------------------------------------------------------------
 

@@ -88,6 +88,10 @@ class ChunkedScheduler:
     # a warm cache must schedule strictly fewer prefill chunk-tokens.
     prefill_tokens_planned: int = field(default=0, init=False)
     cached_tokens_skipped: int = field(default=0, init=False)
+    # Admissions of previously-preempted requests (recompute re-admissions);
+    # the workload harness reports this alongside ``preemptions`` so a
+    # preemption storm's recompute churn is visible per run.
+    readmissions: int = field(default=0, init=False)
 
     # -- admission -----------------------------------------------------------
 
@@ -141,6 +145,8 @@ class ChunkedScheduler:
                     st = SlotState(req=req, prompt=prompt, extra=extra_positions,
                                    admitted_at=self._admissions)
                     self._admissions += 1
+                    if getattr(req, "n_preempted", 0) > 0:
+                        self.readmissions += 1
                     if reserve_full:
                         kv.ensure(i, total)
                     if use_prefix:

@@ -1,0 +1,232 @@
+"""The persisted BENCH_e2e report and its regression gate:
+
+* schema round-trip — load / validate / dump reproduces the exact document
+  (canonical JSON is byte-stable);
+* validator — malformed documents fail with the offending path named;
+* comparator — an identical run passes, an injected 20% TTFT regression is
+  flagged at the default tolerance, deterministic-counter drift and trace-
+  fingerprint drift are flagged, and the CLI exit codes match;
+* replay integration — one real (reduced-model) workload replay produces a
+  schema-valid report block whose deterministic counters reproduce exactly
+  across a second replay of the same trace.
+"""
+import copy
+
+import pytest
+
+from benchmarks import compare
+from benchmarks.workloads import schema
+from benchmarks.workloads.generator import preset
+
+FP = "sha256:" + "0" * 64
+
+
+def _pct(v, n=4):
+    return {"p50": v, "p90": v * 1.2, "p99": v * 1.5, "mean": v * 1.05,
+            "max": v * 2, "n": n}
+
+
+def _block(ttft=0.1):
+    return {
+        "spec": {"name": "synthetic"},
+        "trace_fingerprint": FP,
+        "metrics": {
+            "ttft_s": _pct(ttft),
+            "tpot_s": _pct(0.01),
+            "queue_s": _pct(0.05),
+            "goodput": {"slo_attained": 1.0, "good": 4, "total": 4,
+                        "good_per_s": 2.0},
+            "output_tok_s": 100.0,
+            "wall_s": 2.0,
+        },
+        "counters": {
+            "steps": 10, "preemptions": 1, "preempt_readmissions": 1,
+            "prefill_tokens": 64, "prefill_tokens_planned": 64,
+            "cached_tokens_skipped": 0, "decode_tokens": 16,
+            "total_tokens": 80, "max_step_tokens": 20, "peak_kv_blocks": 8,
+            "whole_prefills": 0, "plan_kernel": "tsar_mxu",
+        },
+    }
+
+
+def _report():
+    return schema.make_report(arch="bitnet-2b-4t-reduced", seed=0, quick=True,
+                              workloads={"steady": _block()},
+                              created_unix=123.0, rev="deadbeef")
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+class TestSchema:
+    def test_roundtrip_byte_exact(self, tmp_path):
+        doc = _report()
+        p = tmp_path / "BENCH_e2e.json"
+        schema.save(doc, str(p))
+        loaded = schema.load(str(p))
+        assert loaded == doc
+        # load -> validate -> dump reproduces the on-disk bytes exactly.
+        assert schema.dumps(loaded) == p.read_text()
+
+    def test_validator_names_offending_path(self):
+        doc = _report()
+        del doc["workloads"]["steady"]["counters"]["preemptions"]
+        with pytest.raises(ValueError, match=r"counters.*preemptions"):
+            schema.validate(doc)
+
+    def test_validator_rejects_bad_fingerprint(self):
+        doc = _report()
+        doc["workloads"]["steady"]["trace_fingerprint"] = "md5:nope"
+        with pytest.raises(ValueError, match="fingerprint"):
+            schema.validate(doc)
+
+    def test_validator_rejects_wrong_version_and_kind(self):
+        doc = _report()
+        doc["kind"] = "BENCH_other"
+        with pytest.raises(ValueError, match="kind"):
+            schema.validate(doc)
+        doc = _report()
+        doc["schema_version"] = schema.SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema_version"):
+            schema.validate(doc)
+
+    def test_validator_rejects_missing_percentile(self):
+        doc = _report()
+        del doc["workloads"]["steady"]["metrics"]["ttft_s"]["p99"]
+        with pytest.raises(ValueError, match="p99"):
+            schema.validate(doc)
+
+
+# ---------------------------------------------------------------------------
+# comparator
+# ---------------------------------------------------------------------------
+
+class TestCompare:
+    def test_identical_run_passes(self):
+        assert compare.compare(_report(), _report()) == []
+
+    def test_injected_20pct_ttft_regression_flagged(self):
+        """The acceptance scenario: +20% on TTFT percentiles must trip the
+        default 15% timing tolerance."""
+        run = _report()
+        m = run["workloads"]["steady"]["metrics"]["ttft_s"]
+        for k in ("p50", "p90", "p99", "mean", "max"):
+            m[k] *= 1.20
+        regs = compare.compare(run, _report())
+        assert regs and all("ttft_s" in r for r in regs)
+        # ...and a looser CI tolerance lets the same run through.
+        assert compare.compare(run, _report(), timing_tol=1.0) == []
+
+    def test_timing_floor_absorbs_micro_jitter(self):
+        """Sub-floor absolute deltas never flag, however large relatively."""
+        run = _report()
+        m = run["workloads"]["steady"]["metrics"]["tpot_s"]
+        m["p50"] *= 1.19   # +19% of 10ms = 1.9ms < the 2ms floor
+        assert compare.compare(run, _report()) == []
+
+    def test_counter_drift_gated_exactly(self):
+        run = _report()
+        run["workloads"]["steady"]["counters"]["preemptions"] += 1
+        regs = compare.compare(run, _report())
+        assert any("preemptions" in r for r in regs)
+        assert compare.compare(run, _report(), counter_tol=2.0) == []
+
+    def test_plan_kernel_change_flagged(self):
+        run = _report()
+        run["workloads"]["steady"]["counters"]["plan_kernel"] = "mem"
+        assert any("plan_kernel" in r
+                   for r in compare.compare(run, _report()))
+
+    def test_goodput_drop_flagged(self):
+        run = _report()
+        g = run["workloads"]["steady"]["metrics"]["goodput"]
+        g["slo_attained"] = 0.75
+        assert any("goodput" in r for r in compare.compare(run, _report()))
+
+    def test_trace_drift_blocks_unless_allowed(self):
+        run = _report()
+        run["workloads"]["steady"]["trace_fingerprint"] = \
+            "sha256:" + "f" * 64
+        assert any("fingerprint" in r for r in compare.compare(run, _report()))
+        assert compare.compare(run, _report(), allow_trace_drift=True) == []
+
+    def test_missing_workload_flagged(self):
+        run = _report()
+        run["workloads"]["extra"] = copy.deepcopy(
+            run["workloads"]["steady"])
+        # run superset of baseline: fine.
+        assert compare.compare(run, _report()) == []
+        # baseline superset of run: regression.
+        assert any("missing" in r for r in compare.compare(_report(), run))
+
+    def test_quick_mismatch_incomparable(self):
+        run = _report()
+        run["quick"] = False
+        regs = compare.compare(run, _report())
+        assert regs and "not comparable" in regs[0]
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        base_p, run_p = tmp_path / "base.json", tmp_path / "run.json"
+        schema.save(_report(), str(base_p))
+        run = _report()
+        run["workloads"]["steady"]["metrics"]["ttft_s"]["p99"] *= 1.5
+        schema.save(run, str(run_p))
+        assert compare.main([str(run_p), str(base_p)]) == 1
+        assert "REGRESSIONS" in capsys.readouterr().out
+        assert compare.main([str(base_p), str(base_p)]) == 0
+        assert compare.main(["/nonexistent.json", str(base_p)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# replay integration (real engine, reduced model)
+# ---------------------------------------------------------------------------
+
+class TestReplayIntegration:
+    @pytest.fixture(scope="class")
+    def replayed(self):
+        import jax
+
+        import repro.configs as configs
+        from benchmarks.workloads import runner
+        from repro.models import model_zoo as zoo
+
+        cfg = configs.get("bitnet-2b-4t").reduced()
+        params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+        spec = preset("decode-heavy", quick=True)
+        block, engine, reqs = runner.run_workload(spec, cfg, params)
+        block2, _, reqs2 = runner.run_workload(spec, cfg, params)
+        return cfg, spec, block, block2, reqs, reqs2
+
+    def test_report_block_is_schema_valid_and_roundtrips(self, replayed,
+                                                         tmp_path):
+        cfg, spec, block, _, reqs, _ = replayed
+        assert all(r.out_tokens for r in reqs), "replay left requests undone"
+        doc = schema.make_report(arch=cfg.name, seed=spec.seed, quick=True,
+                                 workloads={spec.name: block},
+                                 created_unix=1.0, rev="test")
+        p = tmp_path / "BENCH_e2e.json"
+        schema.save(doc, str(p))
+        assert schema.dumps(schema.load(str(p))) == p.read_text()
+        m = block["metrics"]
+        assert m["ttft_s"]["n"] == spec.n_requests
+        assert m["goodput"]["total"] == spec.n_requests
+
+    def test_deterministic_side_reproduces_exactly(self, replayed):
+        """Same trace, same code: counters, fingerprints and emitted tokens
+        must match exactly across replays (greedy decoding) — the property
+        the comparator's exact counter gate stands on."""
+        _, _, block, block2, reqs, reqs2 = replayed
+        assert block["trace_fingerprint"] == block2["trace_fingerprint"]
+        assert block["counters"] == block2["counters"]
+        assert [r.out_tokens for r in reqs] == [r.out_tokens for r in reqs2]
+
+    def test_comparator_passes_self(self, replayed):
+        cfg, spec, block, block2, _, _ = replayed
+        mk = lambda b: schema.make_report(
+            arch=cfg.name, seed=spec.seed, quick=True,
+            workloads={spec.name: b}, created_unix=1.0, rev="test")
+        # Two real replays of the same trace differ only in wall clock —
+        # the loose-timing CI configuration must pass them.
+        assert compare.compare(mk(block), mk(block2), timing_tol=10.0,
+                               timing_floor=1.0) == []

@@ -1,0 +1,82 @@
+"""MoE serving: chunked vs whole-prompt prefill under expert-capacity
+overflow.
+
+The router's capacity window is computed **per forward call** —
+``cap = ceil(s * top_k * capacity_factor / E)`` over that call's sequence
+length ``s`` — and the position-in-expert cumsum restarts every call (see
+``repro/models/moe.py``).  Consequences for the two serving prefill
+policies:
+
+* with ample capacity (dropless, ``capacity_factor=8.0``) nothing
+  overflows, every token is routed identically, and chunked prefill is
+  exactly equivalent to whole-prompt prefill;
+* under heavy overflow (``capacity_factor=0.25``) an 8-token chunk gets its
+  own small capacity window while the whole prompt gets one large one, so
+  the two policies drop DIFFERENT tokens — a true, documented divergence of
+  the serving policies (xfail below), not a bug in either kernel.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import model_zoo as zoo
+from repro.serving import Request, ServingEngine
+
+ARCH = "deepseek-moe-16b"
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    # capacity_factor only reshapes the dispatch tensor, not the params, so
+    # one init serves every capacity variant below.
+    cfg = configs.get(ARCH).reduced()
+    return cfg, zoo.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _serve(cfg, params, policy: str, seed: int):
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=24 + 3 * i),
+                    max_new_tokens=6)
+            for i in range(2)]
+    eng = ServingEngine(cfg, params, max_len=64, batch_slots=2,
+                        prefill_chunk=8, policy=policy)
+    eng.run(reqs)
+    return [r.out_tokens for r in reqs]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dropless_chunked_matches_whole(moe_model, seed):
+    """Ample capacity: chunked and whole-prompt prefill are equivalent."""
+    cfg, params = moe_model
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    assert _serve(cfg, params, "chunked", seed) == \
+        _serve(cfg, params, "whole", seed)
+
+
+@pytest.mark.xfail(
+    strict=True,
+    reason="TRUE divergence, documented: under heavy overflow "
+           "(capacity_factor=0.25, prompt 24 @ chunk 8, request seed 1) the "
+           "per-call capacity window differs between an 8-token chunk and "
+           "the whole prompt, and the per-chunk position-in-expert cumsum "
+           "restarts, so the policies drop different tokens.  Chunked "
+           "serving of overflowing MoE configs is approximate by design; "
+           "fixing it would need capacity windows carried across chunks.")
+def test_overflow_chunked_matches_whole(moe_model):
+    cfg, params = moe_model
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25)
+    assert _serve(cfg, params, "chunked", 1) == \
+        _serve(cfg, params, "whole", 1)
+
+
+def test_overflow_policies_each_deterministic(moe_model):
+    """Both policies remain individually deterministic under overflow —
+    the divergence above is cross-policy, not run-to-run noise."""
+    cfg, params = moe_model
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25)
+    for policy in ("chunked", "whole"):
+        assert _serve(cfg, params, policy, 1) == _serve(cfg, params, policy, 1)

@@ -261,6 +261,50 @@ class TestEnginePrefixReuse:
         # Every non-cached block is back on the free list.
         assert tight_eng.kv.blocks_in_use == tight_eng.prefix.cached_blocks
 
+    def test_preempted_partial_prefill_reused_at_readmission(self, model):
+        """Satellite regression (PR 6): at preemption time the victim's
+        partial prefill is registered into the prefix cache, so its
+        recompute re-admission forks the already-computed blocks instead of
+        re-prefilling from token zero.
+
+        Prompts are pairwise-distinct here, so ``cached_tokens_skipped`` can
+        ONLY come from a preempted request re-matching its own registered
+        blocks — with registration absent it is provably zero.  The cache-on
+        engine must also schedule strictly fewer prefill chunk-tokens than
+        the cache-off engine preempting over the same pool."""
+        cfg, params = model
+        rng = np.random.default_rng(11)
+        mk = lambda: [Request(uid=i, prompt=rng.integers(0, 90, size=30 + i),
+                              max_new_tokens=6) for i in range(3)]
+        rng2 = np.random.default_rng(11)
+        mk2 = lambda: [Request(uid=i, prompt=rng2.integers(0, 90, size=30 + i),
+                               max_new_tokens=6) for i in range(3)]
+        tight = dict(max_len=64, batch_slots=2, prefill_chunk=8,
+                     block_size=4, kv_blocks=16)
+        roomy = ServingEngine(cfg, params, max_len=64, batch_slots=2,
+                              prefill_chunk=8).run(mk())
+        on = ServingEngine(cfg, params, prefix_cache=True, **tight)
+        r_on = on.run(mk2())
+        assert on.stats["preemptions"] > 0, "pool not tight enough to preempt"
+        assert on.sched.readmissions > 0
+        # The tentpole assertion: re-admissions reused registered partials.
+        assert on.sched.cached_tokens_skipped > 0
+        assert on.stats["prefix_hit_tokens"] > 0
+        for a, b in zip(roomy, r_on):
+            assert a.out_tokens == b.out_tokens, (a.uid, a.out_tokens,
+                                                  b.out_tokens)
+        rng2 = np.random.default_rng(11)
+        off = ServingEngine(cfg, params, **tight)
+        r_off = off.run(mk2())
+        assert off.stats["preemptions"] > 0
+        assert off.sched.cached_tokens_skipped == 0
+        assert (on.sched.prefill_tokens_planned
+                < off.sched.prefill_tokens_planned), \
+            "preemption-time registration did not reduce re-prefill work"
+        for a, b in zip(r_on, r_off):
+            assert a.out_tokens == b.out_tokens
+        on.prefix.check()
+
     def test_pool_pressure_evicts_cache_before_preempting(self, model):
         """A pool mostly consumed by stale cached prefixes must be reclaimed
         by the allocator's evictor hook, not strand admissions."""
