@@ -10,6 +10,8 @@ paper's protocol (prefill N=128 batch=1; decode steady-state, Sec. IV-A).
 """
 from __future__ import annotations
 
+import sys
+
 import numpy as np
 
 import jax
@@ -130,7 +132,7 @@ def _load_model(arch: str):
 
 
 def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False,
-                workload: str = "mixed"):
+                workload: str = "mixed", trace_out: str | None = None):
     """Serving-level latency, now trace-driven: the request list is a seeded
     :class:`benchmarks.workloads.Trace` (``preset(workload)``) replayed in
     virtual time, so the scheduling structure is reproducible from the trace
@@ -148,11 +150,18 @@ def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False,
     Rows/CSV carry ``prefix_hit_rate`` next to the TTFT columns, and the
     scenario ASSERTS cache-on outputs token-identical to cache-off (the
     serving-regression contract).
+
+    ``trace_out`` (shared-prefix only) saves the warm replay's
+    observability trace as Perfetto ``trace_event`` JSON — inspect with
+    ``python -m repro.obs.timeline`` or load in chrome://tracing.
     """
     if workload == "shared-prefix":
-        return _run_serving_shared_prefix(arch, quick)
+        return _run_serving_shared_prefix(arch, quick, trace_out=trace_out)
     if workload != "mixed":
         raise ValueError(f"unknown serving workload {workload!r}")
+    if trace_out is not None:
+        raise ValueError("trace_out is only wired for the shared-prefix "
+                         "serving workload")
     from benchmarks.workloads import generator, runner
 
     cfg, params = _load_model(arch)
@@ -185,7 +194,8 @@ def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False,
     return rows
 
 
-def _run_serving_shared_prefix(arch: str, quick: bool = False):
+def _run_serving_shared_prefix(arch: str, quick: bool = False,
+                               trace_out: str | None = None):
     """The shared-prefix trace, prefix cache off vs on (same trace)."""
     from benchmarks.workloads import generator, runner
 
@@ -195,8 +205,17 @@ def _run_serving_shared_prefix(arch: str, quick: bool = False):
 
     rows, outs = [], {}
     for prefix_cache in (False, True):
+        tracer = None
+        if trace_out is not None and prefix_cache:
+            from repro.obs.trace import EventTracer
+            tracer = EventTracer()
         block, eng, reqs = runner.run_workload(
-            spec, cfg, params, trace=trace, prefix_cache=prefix_cache)
+            spec, cfg, params, trace=trace, prefix_cache=prefix_cache,
+            tracer=tracer)
+        if tracer is not None:
+            doc = tracer.save(trace_out)
+            print(f"# obs trace: {trace_out} "
+                  f"({len(doc['traceEvents'])} events)", file=sys.stderr)
         m, c = block["metrics"], block["counters"]
         outs[prefix_cache] = [r.out_tokens for r in reqs]
         hit_rate = c.get("prefix_hit_rate", 0.0)
@@ -226,6 +245,19 @@ def _run_serving_shared_prefix(arch: str, quick: bool = False):
 
 
 if __name__ == "__main__":
-    run()
-    run_serving()
-    run_serving(workload="shared-prefix")
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Fig. 8 end-to-end bench + serving TTFT/TPOT scenarios.")
+    ap.add_argument("--quick", action="store_true", help="fewer reps/sizes")
+    ap.add_argument("--arch", default="bitnet-2b-4t",
+                    help="serving model config (default: %(default)s)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="save the shared-prefix warm replay's "
+                         "observability trace (Perfetto trace_event JSON)")
+    args = ap.parse_args()
+    run(sizes=("125M", "2B-4T") if args.quick else ("125M", "2B-4T", "7B"),
+        quick=args.quick)
+    run_serving(arch=args.arch, quick=args.quick)
+    run_serving(arch=args.arch, quick=args.quick, workload="shared-prefix",
+                trace_out=args.trace_out)

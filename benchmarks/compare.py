@@ -13,7 +13,14 @@ Metrics are gated by class, not uniformly:
   — compared EXACTLY by default (``--counter-tol`` relaxes to a relative
   tolerance).  A counter drift means scheduling behavior changed, which is
   either an intended change (update the baseline) or a real bug — never
-  machine noise.
+  machine noise.  The metrics-registry snapshot rides this section too:
+  ``engine_counters`` folds the registry's step-accounting counters
+  (planned/realized tokens, prefill/decode step split, admissions) into
+  every block, so the exact gate covers them the moment they appear in the
+  committed baseline — no comparator change needed for new counters.
+  (Observability-trace provenance, by contrast, lives at the block level
+  as ``obs_trace`` and is deliberately NOT gated: attaching a tracer must
+  never perturb the exact-gated numbers.)
 * **timing metrics** (TTFT/TPOT/queue percentiles, wall time, token rates)
   are wall-clock — gated by a relative tolerance (``--timing-tol``,
   default 0.15: flag anything >15% worse) with an absolute floor

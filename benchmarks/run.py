@@ -37,6 +37,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="workload-generation seed for the serving suite "
                          "(part of every trace's identity)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="serving suite: save the shared-prefix warm "
+                         "replay's observability trace (Perfetto "
+                         "trace_event JSON; analyze with "
+                         "python -m repro.obs.timeline PATH)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -73,7 +78,8 @@ def main() -> None:
             bench_e2e.run_serving(quick=args.quick)
             + bench_e2e.run_serving(quick=args.quick,
                                     workload="shared-prefix"))
-        report = runner.run_suite(quick=args.quick, seed=args.seed)
+        report = runner.run_suite(quick=args.quick, seed=args.seed,
+                                  trace_out=args.trace_out)
         schema.save(report, args.out)
         print(f"# serving report: {args.out} "
               f"({len(report['workloads'])} workloads, seed {args.seed})",

@@ -11,19 +11,41 @@ aggregate average:
 * **TPOT** — mean time per output token after the first, ``Request.tpot``;
 * **queue** — submit -> first admission into a slot, ``Request.queue_s``;
 * **good request** — every SLO the trace set for it is met
-  (``ttft <= slo_ttft_s`` and ``tpot <= slo_tpot_s``; an unset axis always
-  passes; a request that produced no tokens is never good).
+  (``ttft <= slo_ttft_s * slo_scale`` and ``tpot <= slo_tpot_s * slo_scale``;
+  an unset axis always passes; a request that produced no tokens is never
+  good).
+
+``slo_scale`` is the per-machine calibration factor: preset SLO thresholds
+were tuned against a reference decode-step latency of
+:data:`NOMINAL_DECODE_STEP_S`, and the suite driver measures the actual
+decode-step latency at start (``runner.measure_slo_scale``) and scales every
+threshold by ``measured / nominal`` — so goodput compares serving *behavior*
+across machines instead of comparing their raw CPUs.  The factor is recorded
+in the report provenance (``slo_scale`` / ``ref_decode_step_s`` top-level
+keys).
 
 Counters are the deterministic side of a run: given the same trace and
 code, preemptions, scheduled prefill tokens, cache hit rates and step counts
 are machine-independent, which is what lets ``benchmarks/compare.py`` gate
-them exactly while wall-clock metrics get tolerances.
+them exactly while wall-clock metrics get tolerances.  Since the engine's
+telemetry moved into the typed registry (``repro.obs.metrics``), the counter
+block also carries the registry's step-accounting counters (planned vs
+realized step tokens, prefill/decode step split, admissions) — all
+exact-match class.
 """
 from __future__ import annotations
 
 import numpy as np
 
 PERCENTILES = (50, 90, 99)
+
+# Reference decode-step latency the preset SLO thresholds assume (seconds
+# per pure-decode engine step of the calibration engine — reduced
+# bitnet-2b-4t, 2 slots — measured on the machine the thresholds were
+# tuned on; dominated by per-step jit dispatch at this model scale).
+# ``measure_slo_scale`` divides a fresh measurement by this to get the
+# run's ``slo_scale``.
+NOMINAL_DECODE_STEP_S = 0.12
 
 
 def percentile_summary(values) -> dict:
@@ -39,25 +61,26 @@ def percentile_summary(values) -> dict:
     return out
 
 
-def is_good(req, tr) -> bool:
-    """Did engine-request ``req`` meet trace-request ``tr``'s SLOs?"""
+def is_good(req, tr, slo_scale: float = 1.0) -> bool:
+    """Did engine-request ``req`` meet trace-request ``tr``'s SLOs, with
+    thresholds scaled by the machine calibration factor?"""
     if not req.out_tokens:
         return False
     if tr.slo_ttft_s is not None:
-        if req.ttft is None or req.ttft > tr.slo_ttft_s:
+        if req.ttft is None or req.ttft > tr.slo_ttft_s * slo_scale:
             return False
     if tr.slo_tpot_s is not None and req.tpot is not None:
-        if req.tpot > tr.slo_tpot_s:
+        if req.tpot > tr.slo_tpot_s * slo_scale:
             return False
     return True
 
 
-def goodput(requests, trace, wall_s: float) -> dict:
+def goodput(requests, trace, wall_s: float, slo_scale: float = 1.0) -> dict:
     """Requests meeting their SLOs: fraction, count, and rate per wall
     second.  ``requests`` are engine Requests ordered like
     ``trace.requests`` (the replayer guarantees uid alignment)."""
     by_uid = {tr.uid: tr for tr in trace.requests}
-    good = sum(1 for r in requests if is_good(r, by_uid[r.uid]))
+    good = sum(1 for r in requests if is_good(r, by_uid[r.uid], slo_scale))
     total = len(requests)
     return {
         "slo_attained": good / total if total else float("nan"),
@@ -67,7 +90,8 @@ def goodput(requests, trace, wall_s: float) -> dict:
     }
 
 
-def latency_metrics(requests, trace, wall_s: float) -> dict:
+def latency_metrics(requests, trace, wall_s: float,
+                    slo_scale: float = 1.0) -> dict:
     """The full per-workload metrics block of a BENCH_e2e report."""
     done = [r for r in requests if r.out_tokens]
     total_out = sum(len(r.out_tokens) for r in done)
@@ -75,7 +99,7 @@ def latency_metrics(requests, trace, wall_s: float) -> dict:
         "ttft_s": percentile_summary(r.ttft for r in done),
         "tpot_s": percentile_summary(r.tpot for r in done),
         "queue_s": percentile_summary(r.queue_s for r in done),
-        "goodput": goodput(requests, trace, wall_s),
+        "goodput": goodput(requests, trace, wall_s, slo_scale),
         "output_tok_s": total_out / wall_s if wall_s > 0 else float("nan"),
         "wall_s": float(wall_s),
     }
@@ -98,6 +122,14 @@ def engine_counters(engine) -> dict:
         "peak_kv_blocks": int(s["peak_kv_blocks"]),
         "whole_prefills": int(s["whole_prefills"]),
     }
+    # Registry-only step accounting (no legacy stats key): planned is the
+    # padded B*C step width the jitted call multiplies, so
+    # realized/planned is the padding-waste signal the flat token-packing
+    # refactor will move.
+    reg = engine.metrics
+    for k in ("planned_tokens", "realized_tokens", "prefill_steps",
+              "decode_steps", "admissions"):
+        out[k] = int(reg.get(k).value)
     if "prefix_hit_rate" in s:
         out["prefix_hit_rate"] = round(float(s["prefix_hit_rate"]), 6)
         out["prefix_hit_tokens"] = int(s["prefix_hit_tokens"])

@@ -38,10 +38,11 @@ DEFAULT_ARCH = "bitnet-2b-4t"
 
 
 def build_engine(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
-                 policy: str | None = None, prefix_cache=None):
+                 policy: str | None = None, prefix_cache=None, tracer=None):
     """Construct a ServingEngine from a workload spec's engine hints.
     ``prefix_cache`` overrides the spec hint (the cache-off control
-    replay)."""
+    replay); ``tracer`` attaches an ``repro.obs.trace.EventTracer`` so the
+    replay records its lifecycle/step events."""
     from repro.serving import ServingEngine
 
     e = spec.engine
@@ -56,7 +57,8 @@ def build_engine(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
         block_size=e.get("block_size", 16),
         kv_blocks=e.get("kv_blocks"),
         policy=policy,
-        prefix_cache=prefix_cache)
+        prefix_cache=prefix_cache,
+        tracer=tracer)
 
 
 def replay(engine, trace: Trace, *, step_dt: float = 1.0,
@@ -107,20 +109,50 @@ def replay(engine, trace: Trace, *, step_dt: float = 1.0,
 
 def run_workload(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
                  policy: str | None = None, prefix_cache=None,
-                 warmup: bool = True, trace: Trace | None = None):
+                 warmup: bool = True, trace: Trace | None = None,
+                 tracer=None, slo_scale: float = 1.0):
     """Generate (or take) the trace, replay it, and return
     ``(report_block, engine, requests)``."""
     trace = generate(spec) if trace is None else trace
     engine = build_engine(spec, cfg, params, packed=packed, policy=policy,
-                          prefix_cache=prefix_cache)
+                          prefix_cache=prefix_cache, tracer=tracer)
     reqs, wall = replay(engine, trace, warmup=warmup)
     block = {
         "spec": spec.to_dict(),
         "trace_fingerprint": trace.fingerprint(),
-        "metrics": metrics.latency_metrics(reqs, trace, wall),
+        "metrics": metrics.latency_metrics(reqs, trace, wall, slo_scale),
         "counters": metrics.engine_counters(engine),
     }
     return block, engine, reqs
+
+
+def measure_slo_scale(cfg, params, *, packed: bool = True) -> tuple[float, float]:
+    """Per-machine SLO calibration: measure this host's reference decode-step
+    latency and return ``(slo_scale, ref_decode_step_s)``.
+
+    A tiny engine decodes a short burst after warm-up; the mean pure-decode
+    step wall time divided by :data:`metrics.NOMINAL_DECODE_STEP_S` is the
+    factor every preset SLO threshold gets scaled by — a machine 3x slower
+    than the reference gets 3x looser latency SLOs, so goodput measures
+    scheduling behavior, not raw CPU speed.  The scale is clamped to
+    [0.2, 50] (beyond that the measurement itself is suspect — report it,
+    but don't let one scheduling hiccup turn every SLO vacuous)."""
+    from repro.serving import Request, ServingEngine
+
+    eng = ServingEngine(cfg, params, max_len=64, batch_slots=2, packed=packed,
+                        prefill_chunk=8, block_size=8)
+    eng.warmup(seq_len=40)
+    rng = np.random.default_rng(0xca11b)
+    reqs = [Request(uid=i, prompt=rng.integers(
+                0, cfg.vocab_size, size=4, dtype=np.int32),
+                    max_new_tokens=24) for i in range(2)]
+    eng.run(reqs)
+    reg = eng.metrics
+    n_decode = reg.get("decode_steps").value
+    decode_s = reg.get("step_time_s").labels(phase="decode").value
+    per_step = decode_s / max(n_decode, 1)
+    scale = min(max(per_step / metrics.NOMINAL_DECODE_STEP_S, 0.2), 50.0)
+    return scale, per_step
 
 
 def _emit_csv(name: str, block: dict) -> None:
@@ -144,15 +176,32 @@ SUITE = ("steady", "bursty", "shared-prefix", "decode-heavy",
 
 
 def run_suite(*, quick: bool = False, seed: int = 0,
-              arch: str = DEFAULT_ARCH, names=SUITE) -> dict:
-    """Run the workload suite and return the schema-valid report document."""
+              arch: str = DEFAULT_ARCH, names=SUITE,
+              trace_out: str | None = None,
+              calibrate_slo: bool = True) -> dict:
+    """Run the workload suite and return the schema-valid report document.
+
+    ``trace_out`` saves the shared-prefix warm replay's observability trace
+    (Perfetto ``trace_event`` JSON, see ``repro.obs.trace``) to that path
+    and attaches its provenance to the report block — the trace's structure
+    fingerprint lives OUTSIDE the counters section, so tracing can never
+    perturb the exact-gated numbers.  ``calibrate_slo`` measures this host's
+    reference decode-step latency first and scales every preset SLO
+    threshold by it (recorded in the report provenance)."""
     import jax
 
     import repro.configs as configs
     from repro.models import model_zoo as zoo
+    from repro.obs.trace import EventTracer
 
     cfg = configs.get(arch).reduced()
     params = zoo.init_params(cfg, jax.random.PRNGKey(0))
+
+    slo_scale, ref_step = 1.0, 0.0
+    if calibrate_slo:
+        slo_scale, ref_step = measure_slo_scale(cfg, params)
+        print(f"#   slo calibration: decode step {ref_step * 1e3:.2f} ms "
+              f"-> slo_scale {slo_scale:.2f}", file=sys.stderr)
 
     blocks: dict = {}
     for name in names:
@@ -160,16 +209,32 @@ def run_suite(*, quick: bool = False, seed: int = 0,
         trace = generate(spec)
         print(f"#   workload {name}: {trace.n_requests} requests, "
               f"{trace.total_prompt_tokens()} prompt tokens", file=sys.stderr)
-        block, engine, reqs = run_workload(spec, cfg, params, trace=trace)
+        tracer = (EventTracer()
+                  if trace_out and name == "shared-prefix" else None)
+        block, engine, reqs = run_workload(spec, cfg, params, trace=trace,
+                                           tracer=tracer, slo_scale=slo_scale)
         blocks[name] = block
         _emit_csv(name, block)
+        if tracer is not None:
+            doc = tracer.save(trace_out)
+            block["obs_trace"] = {
+                "path": trace_out,
+                "fingerprint": doc["otherData"]["fingerprint"],
+                "schema_version": doc["otherData"]["schema_version"],
+                "n_events": len(doc["traceEvents"]),
+            }
+            print(f"#   obs trace: {trace_out} "
+                  f"({len(doc['traceEvents'])} events, "
+                  f"{doc['otherData']['fingerprint'][:23]}...)",
+                  file=sys.stderr)
 
         if name == "shared-prefix":
             # Serving-regression contract: the same trace with the cache off
             # must be token-identical, schedule strictly more prefill work,
             # and the warm run must actually hit.
             cold, cold_eng, cold_reqs = run_workload(
-                spec, cfg, params, trace=trace, prefix_cache=False)
+                spec, cfg, params, trace=trace, prefix_cache=False,
+                slo_scale=slo_scale)
             blocks["shared-prefix-cold"] = cold
             _emit_csv("shared-prefix-cold", cold)
             for a, b in zip(reqs, cold_reqs):
@@ -196,4 +261,6 @@ def run_suite(*, quick: bool = False, seed: int = 0,
 
     return schema.make_report(arch=cfg.name, seed=seed, quick=quick,
                               workloads=blocks,
-                              created_unix=time.time())
+                              created_unix=time.time(),
+                              slo_scale=slo_scale,
+                              ref_decode_step_s=ref_step)

@@ -18,7 +18,11 @@ from __future__ import annotations
 import json
 import subprocess
 
-SCHEMA_VERSION = 1
+# v2: metrics-registry step accounting joined the counter block
+# (planned/realized tokens, prefill/decode step split, admissions) and the
+# per-machine SLO calibration factor joined the provenance
+# (slo_scale / ref_decode_step_s).
+SCHEMA_VERSION = 2
 KIND = "BENCH_e2e"
 
 _PCT_KEYS = ("p50", "p90", "p99", "mean", "max", "n")
@@ -27,10 +31,11 @@ _REQUIRED_COUNTERS = (
     "steps", "preemptions", "preempt_readmissions", "prefill_tokens",
     "prefill_tokens_planned", "cached_tokens_skipped", "decode_tokens",
     "total_tokens", "max_step_tokens", "peak_kv_blocks", "whole_prefills",
-    "plan_kernel",
+    "planned_tokens", "realized_tokens", "prefill_steps", "decode_steps",
+    "admissions", "plan_kernel",
 )
 _TOP_KEYS = ("schema_version", "kind", "git_rev", "created_unix", "quick",
-             "seed", "arch", "workloads")
+             "seed", "arch", "slo_scale", "ref_decode_step_s", "workloads")
 
 
 def git_rev() -> str:
@@ -44,8 +49,14 @@ def git_rev() -> str:
 
 def make_report(*, arch: str, seed: int, quick: bool, workloads: dict,
                 created_unix: float | None = None,
-                rev: str | None = None) -> dict:
-    """Assemble a schema-valid report document from per-workload blocks."""
+                rev: str | None = None, slo_scale: float = 1.0,
+                ref_decode_step_s: float = 0.0) -> dict:
+    """Assemble a schema-valid report document from per-workload blocks.
+
+    ``slo_scale`` / ``ref_decode_step_s`` record the per-machine SLO
+    calibration (``workloads.runner.measure_slo_scale``); the defaults mean
+    "uncalibrated" (thresholds used as written, no reference measured).
+    """
     doc = {
         "schema_version": SCHEMA_VERSION,
         "kind": KIND,
@@ -54,6 +65,8 @@ def make_report(*, arch: str, seed: int, quick: bool, workloads: dict,
         "quick": bool(quick),
         "seed": int(seed),
         "arch": arch,
+        "slo_scale": float(slo_scale),
+        "ref_decode_step_s": float(ref_decode_step_s),
         "workloads": workloads,
     }
     validate(doc)
@@ -106,6 +119,8 @@ def validate(doc: dict) -> dict:
         _fail("$.seed", "expected int")
     if not isinstance(doc["arch"], str):
         _fail("$.arch", "expected string")
+    _num(doc["slo_scale"], "$.slo_scale")
+    _num(doc["ref_decode_step_s"], "$.ref_decode_step_s")
     wl = doc["workloads"]
     if not isinstance(wl, dict) or not wl:
         _fail("$.workloads", "expected non-empty object")
@@ -144,6 +159,20 @@ def validate(doc: dict) -> dict:
                     _fail(f"{p}.counters.plan_kernel", "expected string")
             else:
                 _num(c[k], f"{p}.counters.{k}")
+        if "obs_trace" in blk:
+            # Optional observability-trace attachment (run_suite --trace-out):
+            # provenance of the saved Perfetto document, not the events.
+            ot = blk["obs_trace"]
+            if not isinstance(ot, dict):
+                _fail(f"{p}.obs_trace", "expected object")
+            _need(ot, ("fingerprint", "schema_version", "n_events", "path"),
+                  f"{p}.obs_trace")
+            if not (isinstance(ot["fingerprint"], str)
+                    and ot["fingerprint"].startswith("sha256:")):
+                _fail(f"{p}.obs_trace.fingerprint",
+                      f"malformed fingerprint {ot['fingerprint']!r}")
+            _num(ot["schema_version"], f"{p}.obs_trace.schema_version")
+            _num(ot["n_events"], f"{p}.obs_trace.n_events")
     return doc
 
 

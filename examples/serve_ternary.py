@@ -3,7 +3,8 @@ requests against a ternary LM with packed 2-bit weights, chunked-prefill
 continuous batching over a block-paged KV cache — the paper's Sec. IV
 protocol at example scale.
 
-Prints per-request latency stats alongside throughput:
+Prints per-request latency percentiles (registry histograms) alongside
+throughput:
   * TTFT — time to first token (admission + prefill latency),
   * TPOT — mean time per output token after the first (decode cadence),
 plus the engine's step-budget telemetry showing that no step ran more than
@@ -78,15 +79,19 @@ def main():
     wall = time.perf_counter() - t0
 
     total_new = sum(len(r.out_tokens) for r in reqs)
-    lat = engine.latency_stats(reqs)
     span = f"prompts {min(lens)}..{max(lens)} tok, " if lens else ""
     print(f"\n{args.requests} requests ({span}policy={engine.policy}), "
           f"{total_new} tokens in {wall:.2f}s")
     print(f"prefill time {engine.stats['prefill_s']:.2f}s | "
           f"decode time {engine.stats['decode_s']:.2f}s | "
           f"steady-state decode {engine.throughput():.1f} tok/s")
-    print(f"TTFT mean {lat['ttft_mean_s'] * 1e3:.0f}ms max {lat['ttft_max_s'] * 1e3:.0f}ms | "
-          f"TPOT mean {lat['tpot_mean_s'] * 1e3:.0f}ms")
+    # Percentiles come straight off the engine's metrics registry (real
+    # histograms, repro.obs.metrics) — no external replay needed.
+    pct = engine.latency_percentiles()
+    ttft, tpot = pct["ttft_s"], pct["tpot_s"]
+    print(f"TTFT p50 {ttft['p50'] * 1e3:.0f}ms p99 {ttft['p99'] * 1e3:.0f}ms "
+          f"max {ttft['max'] * 1e3:.0f}ms | "
+          f"TPOT p50 {tpot['p50'] * 1e3:.0f}ms p99 {tpot['p99'] * 1e3:.0f}ms")
     print(f"max step load {engine.max_step_tokens()} real tokens "
           f"(budget {args.prefill_chunk} + {args.slots} slots) | "
           f"whole prefills {engine.stats['whole_prefills']} | "

@@ -1,0 +1,25 @@
+"""Engine observability: typed metrics registry, structured event tracing,
+and Perfetto-exportable timelines.
+
+Three modules, layered bottom-up:
+
+* ``metrics``  — :class:`MetricsRegistry`: Counter/Gauge/Histogram with
+  labels, the single owner of engine telemetry.  ``ServingEngine.stats``
+  is a backward-compatible :class:`StatsView` over it.
+* ``trace``    — :class:`EventTracer`: low-overhead per-request lifecycle
+  spans + per-step records, exported as Chrome/Perfetto ``trace_event``
+  JSON (schema-versioned, structure-fingerprinted).  ``NULL_TRACER`` is
+  the no-op recorder the engine runs with by default.
+* ``timeline`` — analysis CLI over a saved trace
+  (``python -m repro.obs.timeline trace.json``): step-budget utilization,
+  batch occupancy, preemption/eviction causality, per-phase breakdown.
+
+See docs/observability.md for the event taxonomy and workflow.
+"""
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry, StatsView
+from repro.obs.trace import NULL_TRACER, EventTracer, NullTracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
+    "EventTracer", "NullTracer", "NULL_TRACER",
+]

@@ -1,0 +1,245 @@
+"""Timeline analysis over a saved observability trace.
+
+``python -m repro.obs.timeline trace.json`` loads + validates a Perfetto
+document written by :class:`repro.obs.trace.EventTracer` and summarizes
+what the raw event stream actually says about the run:
+
+* **step-budget utilization** — Σ realized / Σ planned tokens across step
+  records.  ``planned`` is the padded B×C step width (the rows the jitted
+  kernel really multiplies), so ``1 - utilization`` is exactly the padding
+  waste the ROADMAP's flat token-packing item targets.
+* **batch occupancy** — mean active slots per step, against the slot count.
+* **per-phase time** — wall time split into prefill-carrying vs pure-decode
+  steps (from complete-event durations) plus per-request queued/prefill/
+  decode span totals.
+* **preemption/eviction causality** — for each ``preempted`` mark: the
+  nearest preceding ``kv_pressure`` / ``prefix_evict`` instants (why),
+  and whether the victim was later re-admitted or never finished (what
+  happened next).
+* **prefix reuse** — hit marks with cached token counts, insert/evict
+  instants grouped by cause.
+
+``--require`` turns the CLI into a CI smoke gate: exit nonzero unless the
+trace contains the named features (used by the bench lane on the
+shared-prefix workload).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import trace as _trace
+
+
+def _span_durations(events: list) -> dict:
+    """Total duration per async span name, matching b/e pairs per (id,
+    name).  Unclosed spans are ignored (a truncated run is still
+    analyzable)."""
+    open_ts: dict = {}
+    totals: dict = {}
+    counts: dict = {}
+    for e in events:
+        ph = e.get("ph")
+        if ph not in ("b", "e"):
+            continue
+        key = (e.get("id"), e["name"])
+        if ph == "b":
+            open_ts[key] = e["ts"]
+        elif key in open_ts:
+            totals[e["name"]] = totals.get(e["name"], 0.0) \
+                + (e["ts"] - open_ts.pop(key))
+            counts[e["name"]] = counts.get(e["name"], 0) + 1
+    return {name: {"total_us": totals[name], "n": counts[name]}
+            for name in totals}
+
+
+def analyze(doc: dict) -> dict:
+    """Pure analysis: Perfetto document -> summary dict (JSON-safe)."""
+    evs = doc["traceEvents"]
+    steps = [e for e in evs if e.get("ph") == "X" and e["name"] == "step"]
+    marks = [e for e in evs if e.get("ph") == "n"]
+    instants = [e for e in evs if e.get("ph") == "i"]
+
+    # -- step budget + occupancy + phase split ------------------------------
+    planned = sum(s["args"].get("planned", 0) for s in steps)
+    realized = sum(s["args"].get("realized", 0) for s in steps)
+    occ = [s["args"]["active_slots"] for s in steps
+           if "active_slots" in s["args"]]
+    prefill_steps = [s for s in steps if s["args"].get("prefill_tokens", 0) > 0]
+    decode_steps = [s for s in steps if s["args"].get("prefill_tokens", 0) == 0]
+    kernels: dict = {}
+    for s in steps:
+        k = s["args"].get("kernel")
+        if k is not None:
+            kernels[k] = kernels.get(k, 0) + 1
+
+    # -- preemption causality ----------------------------------------------
+    admitted: dict = {}       # uid -> list of admitted marks (ts order)
+    for m in marks:
+        if m["name"] == "admitted":
+            admitted.setdefault(m["id"], []).append(m)
+    pressure = [e for e in instants
+                if e["name"] in ("kv_pressure", "prefix_evict")]
+    chains = []
+    for m in marks:
+        if m["name"] != "preempted":
+            continue
+        uid, ts = m["id"], m["ts"]
+        before = [p for p in pressure if p["ts"] <= ts]
+        cause = before[-1] if before else None
+        readmit = next((a for a in admitted.get(uid, ())
+                        if a["ts"] > ts and a["args"].get("readmission")),
+                       None)
+        finished = any(x["name"] == "finished" and x["id"] == uid
+                       and x["ts"] > ts for x in marks)
+        chains.append({
+            "uid": uid,
+            "cause": None if cause is None else
+                     {"event": cause["name"], **cause["args"]},
+            "readmitted": readmit is not None,
+            "finished": finished,
+        })
+
+    # -- prefix reuse -------------------------------------------------------
+    hits = [m for m in marks if m["name"] == "prefix_hit"]
+    evicts = [e for e in instants if e["name"] == "prefix_evict"]
+    evict_by_cause: dict = {}
+    for e in evicts:
+        c = e["args"].get("cause", "unknown")
+        evict_by_cause[c] = evict_by_cause.get(c, 0) + 1
+
+    spans = _span_durations(evs)
+    n_req = len({e["id"] for e in evs
+                 if e.get("ph") in ("b", "e", "n") and e["name"] == "req"})
+
+    return {
+        "schema_version": doc["otherData"]["schema_version"],
+        "fingerprint": doc["otherData"]["fingerprint"],
+        "n_events": len(evs),
+        "n_requests": n_req,
+        "steps": {
+            "n": len(steps),
+            "prefill": len(prefill_steps),
+            "decode": len(decode_steps),
+            "planned_tokens": planned,
+            "realized_tokens": realized,
+            "budget_utilization": (realized / planned) if planned else
+                                  float("nan"),
+            "mean_active_slots": (sum(occ) / len(occ)) if occ else
+                                 float("nan"),
+            "wall_us": {
+                "prefill": sum(s["dur"] for s in prefill_steps),
+                "decode": sum(s["dur"] for s in decode_steps),
+            },
+            "kernel_steps": kernels,
+        },
+        "spans_us": spans,
+        "preemptions": {
+            "n": len(chains),
+            "readmitted": sum(c["readmitted"] for c in chains),
+            "chains": chains,
+        },
+        "prefix": {
+            "hits": len(hits),
+            "hit_tokens": sum(h["args"].get("cached_len", 0) for h in hits),
+            "inserts": sum(e["name"] == "prefix_insert" for e in instants),
+            "evictions_by_cause": evict_by_cause,
+        },
+        "kv_pressure_events": sum(e["name"] == "kv_pressure"
+                                  for e in instants),
+    }
+
+
+def _pct(x: float) -> str:
+    return "n/a" if x != x else f"{100.0 * x:.1f}%"
+
+
+def format_summary(s: dict) -> str:
+    st = s["steps"]
+    lines = [
+        f"trace: {s['n_events']} events, {s['n_requests']} requests, "
+        f"schema v{s['schema_version']}",
+        f"  fingerprint: {s['fingerprint'][:23]}...",
+        f"steps: {st['n']} ({st['prefill']} prefill-carrying, "
+        f"{st['decode']} pure-decode)",
+        f"  step-budget utilization: {_pct(st['budget_utilization'])} "
+        f"({st['realized_tokens']}/{st['planned_tokens']} tokens; "
+        f"rest is padded batch width)",
+        f"  mean active slots: {st['mean_active_slots']:.2f}"
+        if st["mean_active_slots"] == st["mean_active_slots"]
+        else "  mean active slots: n/a",
+        f"  wall time: prefill {st['wall_us']['prefill'] / 1e3:.1f} ms, "
+        f"decode {st['wall_us']['decode'] / 1e3:.1f} ms",
+    ]
+    if st["kernel_steps"]:
+        ks = ", ".join(f"{k}: {v}" for k, v in
+                       sorted(st["kernel_steps"].items()))
+        lines.append(f"  steps by plan kernel: {ks}")
+    if s["spans_us"]:
+        lines.append("request phases (total across requests):")
+        for name in ("queued", "prefill", "decode"):
+            if name in s["spans_us"]:
+                d = s["spans_us"][name]
+                lines.append(f"  {name:8s} {d['total_us'] / 1e3:9.1f} ms "
+                             f"across {d['n']} spans")
+    pre = s["preemptions"]
+    lines.append(f"preemptions: {pre['n']} "
+                 f"({pre['readmitted']} later re-admitted); "
+                 f"kv-pressure events: {s['kv_pressure_events']}")
+    for c in pre["chains"]:
+        cause = "no prior pressure event" if c["cause"] is None else \
+            ", ".join(f"{k}={v}" for k, v in c["cause"].items())
+        fate = "finished" if c["finished"] else "unfinished"
+        re = "re-admitted" if c["readmitted"] else "not re-admitted"
+        lines.append(f"  req {c['uid']}: cause [{cause}] -> {re}, {fate}")
+    px = s["prefix"]
+    ev = ", ".join(f"{k}: {v}" for k, v in
+                   sorted(px["evictions_by_cause"].items())) or "none"
+    lines.append(f"prefix cache: {px['hits']} hits "
+                 f"({px['hit_tokens']} cached tokens), "
+                 f"{px['inserts']} inserts, evictions by cause: {ev}")
+    return "\n".join(lines)
+
+
+_REQUIRE_CHECKS = {
+    "prefill-span": lambda s: s["spans_us"].get("prefill", {}).get("n", 0) > 0,
+    "decode-span": lambda s: s["spans_us"].get("decode", {}).get("n", 0) > 0,
+    "prefix-hit": lambda s: s["prefix"]["hits"] > 0,
+    "preemption": lambda s: s["preemptions"]["n"] > 0,
+    "step": lambda s: s["steps"]["n"] > 0,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.timeline",
+        description="Summarize an engine observability trace "
+                    "(Perfetto trace_event JSON).")
+    ap.add_argument("trace", help="path to a --trace-out JSON document")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the analysis as JSON instead of text")
+    ap.add_argument("--require", nargs="+", choices=sorted(_REQUIRE_CHECKS),
+                    default=(), metavar="FEATURE",
+                    help="exit 1 unless the trace contains these features "
+                         f"(choices: {', '.join(sorted(_REQUIRE_CHECKS))})")
+    args = ap.parse_args(argv)
+
+    doc = _trace.load(args.trace)
+    summary = analyze(doc)
+
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        print(format_summary(summary))
+
+    missing = [r for r in args.require if not _REQUIRE_CHECKS[r](summary)]
+    if missing:
+        print(f"MISSING required trace features: {', '.join(missing)}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,302 @@
+"""Low-overhead structured event tracing for the serving engine, exported
+as Chrome/Perfetto ``trace_event`` JSON.
+
+Two recorders share one interface:
+
+* :data:`NULL_TRACER` — the default.  ``enabled`` is False and every method
+  is a no-op; emit sites in the engine guard on ``tracer.enabled`` before
+  building argument dicts, so a tracing-off engine pays one attribute read
+  per potential event (tested: step counters are bit-identical to an
+  untraced engine).
+* :class:`EventTracer` — appends events to an in-memory list, timestamped
+  from ``time.perf_counter`` relative to the tracer epoch, in microseconds
+  (the ``trace_event`` clock unit).
+
+Event taxonomy (see docs/observability.md for the full contract):
+
+* **request lifecycle** — async spans keyed by request uid (Perfetto
+  groups async events by ``(cat, id)``, so each request renders as its own
+  track): a ``req`` envelope span containing ``queued`` / ``prefill`` /
+  ``decode`` sub-spans, with instants ``admitted`` (args: slot, cached_len,
+  readmission), ``prefill_chunk``, ``prefix_hit``, ``first_token``,
+  ``preempted``, ``finished``, ``cancelled``.  A preempted request closes
+  its open phase span with ``preempted: true`` and re-opens ``queued`` —
+  the span sequence is well-formed by construction (property-tested).
+* **engine steps** — one complete (``X``) event per step on the dedicated
+  engine thread, args carrying the deterministic step record: planned vs
+  realized token budget, prefill/decode split, KV blocks in use, active
+  slots, the plan kernel serving this step's row bucket.  The same record
+  feeds three counter (``C``) tracks — ``step_tokens``, ``kv_blocks``,
+  ``active_slots`` — so Perfetto draws budget utilization as a graph.
+* **global instants** — allocator/cache causality: ``kv_pressure`` (the
+  free list ran short and the evictor was consulted), ``prefix_evict``
+  (args: n, cause ∈ {capacity, pressure}), ``prefix_insert``.
+
+**Determinism.**  Event *structure* — order, names, phases, args — is a
+pure function of (trace, code): wall-clock enters only through ``ts`` /
+``dur`` fields, never args.  :func:`structure_fingerprint` hashes the
+canonical JSON of events with ``ts``/``dur`` stripped; same-seed replays
+fingerprint identically (property-tested), which is what lets CI smoke-
+assert a trace artifact without pinning timings.
+
+The exported document is schema-versioned like
+``benchmarks/workloads/schema.py``: ``otherData`` carries kind, schema
+version, git revision, and the structure fingerprint; :func:`validate`
+walks the document and re-derives the fingerprint.  The JSON loads
+directly in ``chrome://tracing`` / https://ui.perfetto.dev.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import subprocess
+import time
+
+TRACE_KIND = "OBS_TRACE"
+TRACE_SCHEMA_VERSION = 1
+
+_PID = 1
+_TID_ENGINE = 0          # engine-step track
+_TID_REQUESTS = 1        # async request spans (grouped by id, not tid)
+
+_ASYNC_PHASES = ("b", "e", "n")
+_KNOWN_PHASES = _ASYNC_PHASES + ("X", "C", "i", "M")
+
+
+class NullTracer:
+    """No-op recorder; the engine's default.  Emit sites guard on
+    ``enabled`` so the disabled path never constructs event args."""
+
+    enabled = False
+    __slots__ = ()
+
+    def begin(self, uid, name, **args):
+        pass
+
+    def end(self, uid, name, **args):
+        pass
+
+    def mark(self, uid, name, **args):
+        pass
+
+    def instant(self, name, **args):
+        pass
+
+    def step(self, dur_s, **args):
+        pass
+
+    def reset(self):
+        pass
+
+
+NULL_TRACER = NullTracer()
+
+
+class EventTracer:
+    """In-memory ``trace_event`` recorder (see module docstring)."""
+
+    enabled = True
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._t0 = clock()
+        self.events: list = []
+
+    def reset(self):
+        """Drop recorded events and rebase the epoch — called by
+        ``ServingEngine.reset_run_stats`` so warm-up never pollutes the
+        steady-state trace."""
+        self._t0 = self._clock()
+        self.events = []
+
+    # -- emit primitives -----------------------------------------------------
+
+    def _ts(self) -> float:
+        return (self._clock() - self._t0) * 1e6
+
+    def begin(self, uid: int, name: str, **args):
+        """Open an async span on request ``uid``'s track."""
+        self.events.append({"ph": "b", "cat": "req", "id": int(uid),
+                            "name": name, "pid": _PID, "tid": _TID_REQUESTS,
+                            "ts": self._ts(), "args": args})
+
+    def end(self, uid: int, name: str, **args):
+        """Close the matching async span."""
+        self.events.append({"ph": "e", "cat": "req", "id": int(uid),
+                            "name": name, "pid": _PID, "tid": _TID_REQUESTS,
+                            "ts": self._ts(), "args": args})
+
+    def mark(self, uid: int, name: str, **args):
+        """Async instant on request ``uid``'s track."""
+        self.events.append({"ph": "n", "cat": "req", "id": int(uid),
+                            "name": name, "pid": _PID, "tid": _TID_REQUESTS,
+                            "ts": self._ts(), "args": args})
+
+    def instant(self, name: str, **args):
+        """Global instant (allocator pressure, cache eviction)."""
+        self.events.append({"ph": "i", "s": "g", "name": name, "pid": _PID,
+                            "tid": _TID_ENGINE, "ts": self._ts(),
+                            "args": args})
+
+    def step(self, dur_s: float, **args):
+        """One engine step: a complete event on the engine track (``ts`` is
+        the step start) plus counter samples for the budget/occupancy
+        tracks.  ``args`` must be deterministic (no wall-clock values)."""
+        ts = self._ts() - dur_s * 1e6
+        self.events.append({"ph": "X", "name": "step", "pid": _PID,
+                            "tid": _TID_ENGINE, "ts": ts,
+                            "dur": dur_s * 1e6, "args": args})
+        ctr = {"ph": "C", "pid": _PID, "tid": _TID_ENGINE, "ts": ts}
+        if "planned" in args:
+            self.events.append({**ctr, "name": "step_tokens",
+                                "args": {"planned": args["planned"],
+                                         "realized": args.get("realized", 0)}})
+        if "kv_blocks" in args:
+            self.events.append({**ctr, "name": "kv_blocks",
+                                "args": {"in_use": args["kv_blocks"]}})
+        if "active_slots" in args:
+            self.events.append({**ctr, "name": "active_slots",
+                                "args": {"slots": args["active_slots"]}})
+
+    # -- export --------------------------------------------------------------
+
+    def _meta_events(self) -> list:
+        return [
+            {"ph": "M", "name": "process_name", "pid": _PID, "tid": 0,
+             "args": {"name": "tsar-serving-engine"}},
+            {"ph": "M", "name": "thread_name", "pid": _PID,
+             "tid": _TID_ENGINE, "args": {"name": "engine steps"}},
+            {"ph": "M", "name": "thread_name", "pid": _PID,
+             "tid": _TID_REQUESTS, "args": {"name": "requests"}},
+        ]
+
+    def to_perfetto(self, rev: str | None = None) -> dict:
+        evs = self._meta_events() + list(self.events)
+        return {
+            "displayTimeUnit": "ms",
+            "traceEvents": evs,
+            "otherData": {
+                "kind": TRACE_KIND,
+                "schema_version": TRACE_SCHEMA_VERSION,
+                "git_rev": git_rev() if rev is None else rev,
+                "clock": "perf_counter_rel_us",
+                "fingerprint": structure_fingerprint(evs),
+            },
+        }
+
+    def save(self, path: str, rev: str | None = None) -> dict:
+        doc = self.to_perfetto(rev=rev)
+        save_doc(doc, path)
+        return doc
+
+
+# ---------------------------------------------------------------------------
+# structure fingerprint + document IO/validation
+# ---------------------------------------------------------------------------
+
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def structure(events: list) -> list:
+    """Events with the wall-clock fields (``ts``/``dur``) stripped — the
+    deterministic side of a trace."""
+    return [{k: v for k, v in e.items() if k not in ("ts", "dur")}
+            for e in events]
+
+
+def structure_fingerprint(events: list) -> str:
+    s = json.dumps(structure(events), sort_keys=True,
+                   separators=(",", ":"))
+    return "sha256:" + hashlib.sha256(s.encode("utf-8")).hexdigest()
+
+
+def dumps(doc: dict) -> str:
+    """Canonical serialization (sorted keys, fixed separators, trailing
+    newline)."""
+    return json.dumps(doc, sort_keys=True, separators=(",", ":")) + "\n"
+
+
+def save_doc(doc: dict, path: str) -> None:
+    validate(doc)
+    with open(path, "w") as f:
+        f.write(dumps(doc))
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return validate(json.load(f))
+
+
+def _fail(path: str, msg: str):
+    raise ValueError(f"{TRACE_KIND} schema: {path}: {msg}")
+
+
+def validate(doc: dict) -> dict:
+    """Structural validation + fingerprint re-derivation; returns ``doc``."""
+    if not isinstance(doc, dict):
+        _fail("$", "expected object")
+    for k in ("traceEvents", "otherData"):
+        if k not in doc:
+            _fail("$", f"missing key {k!r}")
+    od = doc["otherData"]
+    if not isinstance(od, dict):
+        _fail("$.otherData", "expected object")
+    for k in ("kind", "schema_version", "git_rev", "fingerprint"):
+        if k not in od:
+            _fail("$.otherData", f"missing key {k!r}")
+    if od["kind"] != TRACE_KIND:
+        _fail("$.otherData.kind", f"{od['kind']!r} != {TRACE_KIND!r}")
+    if od["schema_version"] != TRACE_SCHEMA_VERSION:
+        _fail("$.otherData.schema_version",
+              f"{od['schema_version']!r} != {TRACE_SCHEMA_VERSION}")
+    evs = doc["traceEvents"]
+    if not isinstance(evs, list):
+        _fail("$.traceEvents", "expected list")
+    for i, e in enumerate(evs):
+        p = f"$.traceEvents[{i}]"
+        if not isinstance(e, dict):
+            _fail(p, "expected object")
+        ph = e.get("ph")
+        if ph not in _KNOWN_PHASES:
+            _fail(f"{p}.ph", f"unknown phase {ph!r}")
+        if not isinstance(e.get("name"), str):
+            _fail(f"{p}.name", "expected string")
+        if ph != "M" and not isinstance(e.get("ts"), (int, float)):
+            _fail(f"{p}.ts", "expected number")
+        if ph in _ASYNC_PHASES:
+            if "id" not in e or not isinstance(e.get("cat"), str):
+                _fail(p, "async event needs id + cat")
+        if ph == "X" and not isinstance(e.get("dur"), (int, float)):
+            _fail(f"{p}.dur", "complete event needs dur")
+        if ph == "C" and not isinstance(e.get("args"), dict):
+            _fail(f"{p}.args", "counter event needs args")
+    fp = structure_fingerprint(evs)
+    if od["fingerprint"] != fp:
+        _fail("$.otherData.fingerprint",
+              f"{od['fingerprint']!r} does not match event structure "
+              f"({fp!r})")
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# optional jax.profiler alignment hooks
+# ---------------------------------------------------------------------------
+
+def step_annotation(step_num: int):
+    """Context manager annotating one engine step in an XLA profiler trace
+    (``jax.profiler.StepTraceAnnotation``), so device timelines captured
+    with ``jax.profiler.trace(...)`` align with engine-step records.  Falls
+    back to a null context when the profiler is unavailable."""
+    try:
+        from jax import profiler
+        return profiler.StepTraceAnnotation("tsar_engine_step",
+                                            step_num=step_num)
+    except Exception:
+        return contextlib.nullcontext()

@@ -36,6 +36,7 @@ Weight modes:
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import time
 import warnings
@@ -46,6 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers, model_zoo
+from repro.obs import NULL_TRACER, MetricsRegistry, StatsView
+from repro.obs import trace as obs_trace
 from repro.plan import BatchProfile, ModelPlan, compile_plan
 from repro.plan import runtime as plan_runtime
 from repro.serving.kv_cache import PagedKVCache
@@ -309,7 +312,8 @@ class ServingEngine:
                  plan: ModelPlan | None = None,
                  sparse: str | bool = "auto",
                  sparse_block: tuple | None = None,
-                 prefix_cache: bool | int = False):
+                 prefix_cache: bool | int = False,
+                 tracer=None, profiler_annotations: bool = False):
         self.cfg = cfg
         self.params = (freeze_params(params, sparse=sparse,
                                      block_shape=sparse_block)
@@ -349,19 +353,102 @@ class ServingEngine:
             self.prefix = PrefixCache(self.kv, capacity_blocks=cap)
         self._queue: list[Request] = []
         self._slots: list[SlotState | None] = [None] * batch_slots
-        self.stats = {
-            "prefill_s": 0.0, "decode_s": 0.0,
-            "decode_tokens": 0, "total_tokens": 0, "prefill_tokens": 0,
-            "steps": 0, "whole_prefills": 0, "preemptions": 0,
-            "peak_kv_blocks": 0, "max_step_tokens": 0,
-        }
+
+        # -- observability (repro.obs) ----------------------------------------
+        # The typed registry OWNS all run telemetry; ``stats`` below is a
+        # write-through view over it under the legacy key names, so every
+        # pre-existing key keeps its name, meaning, and mutability.  The
+        # tracer defaults to the no-op recorder: every emit site guards on
+        # ``tracer.enabled``, so an untraced engine pays one attribute read
+        # per potential event and its counters stay bit-identical.
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self._profile_steps = bool(profiler_annotations)
+        self._phase: dict[int, str] = {}  # uid -> open lifecycle span (traced)
+        self.sched.tracer = self.tracer
+        self.kv.tracer = self.tracer
+        if self.prefix is not None:
+            self.prefix.tracer = self.tracer
+        reg = self.metrics = MetricsRegistry()
+        t_step = reg.counter("step_time_s",
+                             "wall seconds in jitted step calls, by phase",
+                             labels=("phase",))
+        self._t_prefill = t_step.labels(phase="prefill")
+        self._t_decode = t_step.labels(phase="decode")
+        self._c_steps = reg.counter("steps", "mixed chunk/decode engine steps")
+        self._c_decode_tokens = reg.counter(
+            "decode_tokens", "tokens emitted by pure-decode steps")
+        self._c_total_tokens = reg.counter("total_tokens",
+                                           "all emitted tokens")
+        self._c_prefill_tokens = reg.counter(
+            "prefill_tokens", "prompt tokens scheduled into chunks")
+        self._c_whole_prefills = reg.counter(
+            "whole_prefills", "single-call whole-prompt prefills")
+        self._c_preemptions = reg.counter(
+            "preemptions", "recompute-style slot preemptions")
+        self._c_admissions = reg.counter(
+            "admissions", "slot admissions (including re-admissions)")
+        self._c_planned = reg.counter(
+            "planned_tokens",
+            "padded B*C step-width rows the jitted call multiplies")
+        self._c_realized = reg.counter(
+            "realized_tokens", "real (non-padding) tokens across steps")
+        self._c_prefill_steps = reg.counter(
+            "prefill_steps", "steps carrying a prefill chunk")
+        self._c_decode_steps = reg.counter("decode_steps", "pure-decode steps")
+        self._g_kv = reg.gauge(
+            "kv_blocks", "pool blocks in use (peak -> peak_kv_blocks)")
+        self._g_step_tokens = reg.gauge(
+            "step_tokens", "real tokens of the last step "
+                           "(peak -> max_step_tokens)")
+        self._h_ttft = reg.histogram("ttft_s", "time to first token (s)")
+        self._h_tpot = reg.histogram(
+            "tpot_s", "mean time per output token after the first (s)")
+        self._h_queue = reg.histogram(
+            "queue_s", "submit -> first slot admission (s)")
+
+        def _cv(m):
+            # counter/gauge value with the legacy dict's write-through
+            return (lambda: m.value, m.set)
+
+        def _peak(g):
+            # Legacy peak keys read the gauge's tracked peak; an external
+            # write (the old reset idiom) rebases both value and peak.
+            def setter(v):
+                g.value = v
+                g.peak = v
+            return (lambda: g.peak, setter)
+
+        self.stats = StatsView({
+            "prefill_s": _cv(self._t_prefill),
+            "decode_s": _cv(self._t_decode),
+            "decode_tokens": _cv(self._c_decode_tokens),
+            "total_tokens": _cv(self._c_total_tokens),
+            "prefill_tokens": _cv(self._c_prefill_tokens),
+            "steps": _cv(self._c_steps),
+            "whole_prefills": _cv(self._c_whole_prefills),
+            "preemptions": _cv(self._c_preemptions),
+            "peak_kv_blocks": _peak(self._g_kv),
+            "max_step_tokens": _peak(self._g_step_tokens),
+        })
         if prefix_cache:
-            # Keys exist whenever the cache was REQUESTED (including the
-            # whole-policy degrade, where they stay at zero) and never when
-            # it wasn't — a cache-off engine's stats are unchanged.
-            self.stats.update({"prefix_hit_rate": 0.0, "cached_blocks": 0,
-                               "prefix_hit_tokens": 0, "prefix_lookups": 0,
-                               "prefix_evictions": 0})
+            # Keys (and their registry metrics) exist whenever the cache was
+            # REQUESTED (including the whole-policy degrade, where they stay
+            # at zero) and never when it wasn't — a cache-off engine's stats
+            # are unchanged.
+            for key, m in (
+                ("prefix_hit_rate", reg.gauge(
+                    "prefix_hit_rate",
+                    "fraction of admitted prompt tokens served from cache")),
+                ("cached_blocks", reg.gauge(
+                    "cached_blocks", "blocks held by the prefix-cache tree")),
+                ("prefix_hit_tokens", reg.counter(
+                    "prefix_hit_tokens", "prompt tokens served from cache")),
+                ("prefix_lookups", reg.counter(
+                    "prefix_lookups", "prefix-cache forks attempted")),
+                ("prefix_evictions", reg.counter(
+                    "prefix_evictions", "cached blocks evicted")),
+            ):
+                self.stats.bind(key, *_cv(m))
         # Density telemetry: measured once at init from the packed planes so
         # the sparse-dispatch signal is visible per deployment.  The profile
         # decodes one stacked layer slice at a time (bounded host transient)
@@ -438,6 +525,12 @@ class ServingEngine:
     def submit(self, req: Request):
         if req.t_submit is None:
             req.t_submit = time.perf_counter()
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin(req.uid, "req", prompt_len=len(req.prompt),
+                     max_new_tokens=req.max_new_tokens)
+            tr.begin(req.uid, "queued")
+            self._phase[req.uid] = "queued"
         self._queue.append(req)
 
     def _admit(self):
@@ -445,11 +538,20 @@ class ServingEngine:
                                     extra_positions=self._extra,
                                     reserve_full=self.policy == "whole",
                                     prefix_cache=self.prefix)
+        tr = self.tracer
         for i, st in admitted:
+            self._c_admissions.inc()
             if st.req.t_admit is None:
                 # First admission only: queueing latency measures the wait
                 # for a slot, not re-admission churn after preemption.
                 st.req.t_admit = time.perf_counter()
+                self._h_queue.observe(st.req.queue_s)
+            if tr.enabled:
+                # The scheduler already closed the queued span and marked
+                # the admission; the prefill phase starts here.
+                tr.begin(st.req.uid, "prefill", slot=i,
+                         cached_len=st.cached_len)
+                self._phase[st.req.uid] = "prefill"
             if self.policy == "whole":
                 self._prefill_slot(i, st)
             # chunked: the scheduler interleaves this prompt's chunks with
@@ -493,10 +595,12 @@ class ServingEngine:
             self.params, self.kv.pools, table, batch, jnp.int32(i))
         sel.block_until_ready()
         dt = time.perf_counter() - t0
-        self.stats["prefill_s"] += dt
-        self.stats["whole_prefills"] += 1
-        self.stats["max_step_tokens"] = max(self.stats["max_step_tokens"],
-                                            len(st.prompt) + st.extra)
+        self._t_prefill.inc(dt)
+        self._c_whole_prefills.inc()
+        self._g_step_tokens.set(len(st.prompt) + st.extra)
+        if self.tracer.enabled:
+            self.tracer.mark(st.req.uid, "prefill_chunk",
+                             n=len(st.prompt), start=0, whole=True)
         self.kv.lengths[i] = len(st.prompt) + st.extra
         st.cursor = len(st.prompt)
         tok = int(self._sample(sel, np.array([st.req.temperature]))[0])
@@ -519,13 +623,33 @@ class ServingEngine:
     def _emit_token(self, i: int, st: SlotState, tok: int):
         req = st.req
         req.out_tokens.append(tok)
-        if req.t_first is None:
+        tr = self.tracer
+        first = req.t_first is None
+        if first:
             req.t_first = time.perf_counter()
-        self.stats["total_tokens"] += 1
+            self._h_ttft.observe(req.ttft)
+        if tr.enabled:
+            # A token emission always means the prompt is fully in cache —
+            # close the prefill phase (also after a re-prefill following
+            # preemption, where it isn't the request's first token).
+            if self._phase.get(req.uid) == "prefill":
+                tr.end(req.uid, "prefill")
+                tr.begin(req.uid, "decode")
+                self._phase[req.uid] = "decode"
+            if first:
+                tr.mark(req.uid, "first_token")
+        self._c_total_tokens.inc()
         if (len(req.out_tokens) >= req.max_new_tokens
                 or self.kv.lengths[i] >= self.max_len - 1):
             req.done = True
             req.t_done = time.perf_counter()
+            self._h_tpot.observe(req.tpot)
+            if tr.enabled:
+                tr.end(req.uid, "decode")
+                tr.mark(req.uid, "finished", n_out=len(req.out_tokens),
+                        preemptions=req.n_preempted)
+                tr.end(req.uid, "req")
+                self._phase.pop(req.uid, None)
             # Register prompt + generated tokens (multi-turn reuse: a
             # follow-up request quoting this conversation hits them) while
             # the slot still holds its block references.
@@ -549,25 +673,47 @@ class ServingEngine:
             return False
 
         table = self.kv.table_view(plan.view_blocks)
+        step_no = self._c_steps.value
+        # planned = the padded B*C step width: the rows the jitted matmuls
+        # actually multiply.  realized/planned is the step-budget utilization
+        # the timeline CLI reports; 1 - it is exactly the padding waste the
+        # ROADMAP's flat token-packing item targets.
+        planned = self.slots * plan.chunk
+        ann = (obs_trace.step_annotation(step_no) if self._profile_steps
+               else contextlib.nullcontext())
         t0 = time.perf_counter()
-        sel, self.kv.pools = self._chunk_fn(
-            self.params, self.kv.pools, table,
-            jnp.asarray(plan.tokens), jnp.asarray(plan.pos),
-            jnp.asarray(plan.lengths), jnp.asarray(plan.emit_idx))
-        sel.block_until_ready()
+        with ann:
+            sel, self.kv.pools = self._chunk_fn(
+                self.params, self.kv.pools, table,
+                jnp.asarray(plan.tokens), jnp.asarray(plan.pos),
+                jnp.asarray(plan.lengths), jnp.asarray(plan.emit_idx))
+            sel.block_until_ready()
         dt = time.perf_counter() - t0
 
-        self.stats["steps"] += 1
-        self.stats["max_step_tokens"] = max(self.stats["max_step_tokens"],
-                                            plan.real_tokens)
-        self.stats["peak_kv_blocks"] = max(self.stats["peak_kv_blocks"],
-                                           self.kv.blocks_in_use)
-        self.stats["prefill_tokens"] += plan.prefill_tokens
+        self._c_steps.inc()
+        self._c_planned.inc(planned)
+        self._c_realized.inc(plan.real_tokens)
+        self._g_step_tokens.set(plan.real_tokens)
+        self._g_kv.set(int(self.kv.blocks_in_use))
+        self._c_prefill_tokens.inc(plan.prefill_tokens)
         if plan.prefill_tokens > 0:
-            self.stats["prefill_s"] += dt
+            self._t_prefill.inc(dt)
+            self._c_prefill_steps.inc()
         else:
-            self.stats["decode_s"] += dt
-            self.stats["decode_tokens"] += plan.decode_tokens
+            self._t_decode.inc(dt)
+            self._c_decode_steps.inc()
+            self._c_decode_tokens.inc(plan.decode_tokens)
+
+        tr = self.tracer
+        if tr.enabled:
+            tr.step(dt, step=step_no, planned=planned,
+                    realized=plan.real_tokens,
+                    prefill_tokens=plan.prefill_tokens,
+                    decode_tokens=plan.decode_tokens,
+                    kv_blocks=int(self.kv.blocks_in_use),
+                    active_slots=sum(1 for s in self._slots if s is not None),
+                    kernel=(self.plan.dominant_kernel(planned)
+                            if self.plan is not None else None))
 
         toks = None
         if plan.emit.any():
@@ -581,6 +727,9 @@ class ServingEngine:
                 continue
             self.kv.lengths[i] += int(plan.n_real[i])
             if i == plan.prefill_slot:
+                if tr.enabled:
+                    tr.mark(st.req.uid, "prefill_chunk",
+                            n=int(plan.n_real[i]), start=st.cursor)
                 st.cursor += int(plan.n_real[i])
                 if not st.prefilling:
                     # Prompt fully in cache: register its full blocks NOW so
@@ -606,11 +755,21 @@ class ServingEngine:
         stay evictable, so under real pressure the allocator can still
         reclaim them before any live request is preempted)."""
         st = self._slots[i]
+        tr = self.tracer
+        if tr.enabled:
+            uid = st.req.uid
+            ph = self._phase.get(uid)
+            if ph in ("prefill", "decode"):
+                tr.end(uid, ph, preempted=True)
+            tr.mark(uid, "preempted", slot=i, cursor=st.cursor,
+                    cached_len=st.cached_len)
+            tr.begin(uid, "queued")
+            self._phase[uid] = "queued"
         self._register_prefix(i, st)
         self.kv.free_slot(i)
         self._slots[i] = None
         self._queue.insert(0, st.req)
-        self.stats["preemptions"] += 1
+        self._c_preemptions.inc()
         st.req.n_preempted += 1
 
     @property
@@ -656,30 +815,33 @@ class ServingEngine:
         self.reset_run_stats()
 
     def reset_run_stats(self) -> None:
-        """Zero the per-run counters and drop any prefix-cache state, keeping
-        init-time telemetry (plan/density keys).  Requires an idle engine;
-        used by the workload runner after :meth:`warmup`."""
+        """Zero the per-run counters, drop any prefix-cache state, and clear
+        recorded trace events, keeping init-time telemetry (plan/density
+        keys).  Peak gauges (``peak_kv_blocks``/``max_step_tokens``) are
+        REBASED to the post-reset live values rather than blindly zeroed, so
+        warm-up can never leak into steady-state peaks while state the
+        engine genuinely still holds is never undercounted.  Requires an
+        idle engine; used by the workload runner after :meth:`warmup`."""
         if self.busy:
             raise RuntimeError("reset_run_stats() requires an idle engine")
-        for k in ("prefill_s", "decode_s"):
-            self.stats[k] = 0.0
-        for k in ("decode_tokens", "total_tokens", "prefill_tokens", "steps",
-                  "whole_prefills", "preemptions", "peak_kv_blocks",
-                  "max_step_tokens"):
-            self.stats[k] = 0
-        self.sched.prefill_tokens_planned = 0
-        self.sched.cached_tokens_skipped = 0
-        self.sched.readmissions = 0
         if self.prefix is not None:
             # All slots are free, so every cached block is evictable; a
             # fresh tree also resets the hit/miss telemetry.
-            self.prefix.evict(self.prefix.cached_blocks)
+            self.prefix.evict(self.prefix.cached_blocks, cause="reset")
             self.prefix = PrefixCache(self.kv,
                                       capacity_blocks=self.prefix.capacity)
-        if "prefix_hit_rate" in self.stats:
-            self.stats.update({"prefix_hit_rate": 0.0, "cached_blocks": 0,
-                               "prefix_hit_tokens": 0, "prefix_lookups": 0,
-                               "prefix_evictions": 0})
+            self.prefix.tracer = self.tracer
+        self.sched.prefill_tokens_planned = 0
+        self.sched.cached_tokens_skipped = 0
+        self.sched.readmissions = 0
+        # Refresh gauge values to post-reset reality FIRST, then let the
+        # registry reset counters/histograms and rebase every gauge peak to
+        # its current value.
+        self._g_kv.set(int(self.kv.blocks_in_use))
+        self._g_step_tokens.set(0)
+        self.metrics.reset_run()
+        self._sync_prefix_stats()
+        self.tracer.reset()
 
     # -- metrics --------------------------------------------------------------
 
@@ -701,3 +863,10 @@ class ServingEngine:
             "tpot_mean_s": mean(tpots),
             "n": len(ttfts),
         }
+
+    def latency_percentiles(self) -> dict:
+        """{ttft_s, tpot_s, queue_s} -> {p50, p90, p99, mean, max, n} from
+        the registry histograms — tail latencies straight off the engine,
+        no external runner replay required."""
+        return {name: self.metrics.get(name).summary()
+                for name in ("ttft_s", "tpot_s", "queue_s")}

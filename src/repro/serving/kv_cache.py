@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model_zoo
+from repro.obs import NULL_TRACER
 
 
 class PagedKVCache:
@@ -81,6 +82,7 @@ class PagedKVCache:
         self.refcount[0] = 1                          # scratch: pinned forever
         self.block_hash: dict[int, int] = {}          # cached-content hashes
         self.evictor = None                           # set by PrefixCache
+        self.tracer = NULL_TRACER                     # set by ServingEngine
 
     # -- allocator ----------------------------------------------------------
 
@@ -118,6 +120,13 @@ class PagedKVCache:
         if grow <= 0:
             return True
         if grow > len(self._free) and self.evictor is not None:
+            if self.tracer.enabled:
+                # Allocator pressure: the free list alone can't cover this
+                # growth and the evictor is being consulted — the causal
+                # precursor of prefix evictions and (if those fall short)
+                # preemptions in the timeline analysis.
+                self.tracer.instant("kv_pressure", slot=slot, need=grow,
+                                    free=len(self._free))
             self.evictor.evict(grow - len(self._free))
         if grow > len(self._free):
             return False

@@ -52,6 +52,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
+
 _ROOT_HASH = hash("tsar-prefix-root")
 
 
@@ -94,6 +96,7 @@ class PrefixCache:
         self.hit_tokens = 0       # prompt tokens served from cache
         self.miss_tokens = 0      # prompt tokens that had to be prefilled
         self.evictions = 0
+        self.tracer = NULL_TRACER   # set by ServingEngine
         kv.evictor = self
 
     # -- properties ----------------------------------------------------------
@@ -177,8 +180,11 @@ class PrefixCache:
                 added += 1
             child.last_used = self._tick
             node = child
+        if added and self.tracer.enabled:
+            self.tracer.instant("prefix_insert", added=added,
+                                cached_blocks=self._size)
         if self.capacity is not None and self._size > self.capacity:
-            self.evict(self._size - self.capacity)
+            self.evict(self._size - self.capacity, cause="capacity")
         return added
 
     # -- eviction (the kv.evictor protocol) ----------------------------------
@@ -201,9 +207,12 @@ class PrefixCache:
 
         return rec(self.root)[0]
 
-    def evict(self, n: int) -> int:
+    def evict(self, n: int, cause: str = "pressure") -> int:
         """Free up to ``n`` cached blocks, least-recently-used evictable
-        leaf first.  Never touches a block any slot still references."""
+        leaf first.  Never touches a block any slot still references.
+        ``cause`` labels the traced eviction event: ``"pressure"`` (the
+        allocator ran short — the ``kv.evictor`` hook's default),
+        ``"capacity"`` (the ``capacity_blocks`` bound), ``"reset"``."""
         freed = 0
         while freed < n:
             leaf = None
@@ -223,6 +232,8 @@ class PrefixCache:
             self._size -= 1
             self.evictions += 1
             freed += 1
+        if freed and self.tracer.enabled:
+            self.tracer.instant("prefix_evict", n=freed, cause=cause)
         return freed
 
     # -- invariants ----------------------------------------------------------

@@ -35,6 +35,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
+
 
 @dataclass
 class SlotState:
@@ -92,6 +94,10 @@ class ChunkedScheduler:
     # the workload harness reports this alongside ``preemptions`` so a
     # preemption storm's recompute churn is visible per run.
     readmissions: int = field(default=0, init=False)
+    # Event tracer (repro.obs.trace); the owning engine swaps in its own.
+    # Admission events are emitted HERE because only the scheduler sees the
+    # decision and its inputs (slot, cached fork length, rejections).
+    tracer: object = field(default=NULL_TRACER, init=False, repr=False)
 
     # -- admission -----------------------------------------------------------
 
@@ -132,6 +138,12 @@ class ChunkedScheduler:
                         # Retry this slot with the next queued request.
                         queue.pop(0)
                         req.done = True
+                        if self.tracer.enabled:
+                            self.tracer.end(req.uid, "queued")
+                            self.tracer.mark(req.uid, "cancelled",
+                                             reason="prompt_too_long",
+                                             total_positions=total)
+                            self.tracer.end(req.uid, "req")
                         continue
                     use_prefix = (prefix_cache is not None and not reserve_full
                                   and extra_positions == 0)
@@ -156,6 +168,15 @@ class ChunkedScheduler:
                         st.cached_len = prefix_cache.fork(i, prompt)
                         st.cursor = st.cached_len
                         self.cached_tokens_skipped += st.cached_len
+                    if self.tracer.enabled:
+                        self.tracer.end(req.uid, "queued")
+                        self.tracer.mark(
+                            req.uid, "admitted", slot=i,
+                            cached_len=st.cached_len,
+                            readmission=getattr(req, "n_preempted", 0) > 0)
+                        if st.cached_len:
+                            self.tracer.mark(req.uid, "prefix_hit",
+                                             cached_len=st.cached_len)
                     slots[i] = st
                     admitted.append((i, st))
                     break

@@ -44,7 +44,9 @@ def _block(ttft=0.1):
             "prefill_tokens": 64, "prefill_tokens_planned": 64,
             "cached_tokens_skipped": 0, "decode_tokens": 16,
             "total_tokens": 80, "max_step_tokens": 20, "peak_kv_blocks": 8,
-            "whole_prefills": 0, "plan_kernel": "tsar_mxu",
+            "whole_prefills": 0, "planned_tokens": 200,
+            "realized_tokens": 80, "prefill_steps": 6, "decode_steps": 4,
+            "admissions": 5, "plan_kernel": "tsar_mxu",
         },
     }
 
@@ -95,6 +97,39 @@ class TestSchema:
         doc = _report()
         del doc["workloads"]["steady"]["metrics"]["ttft_s"]["p99"]
         with pytest.raises(ValueError, match="p99"):
+            schema.validate(doc)
+
+    def test_validator_requires_registry_counters(self):
+        """v2: registry step accounting is part of the required counter set."""
+        for k in ("planned_tokens", "realized_tokens", "prefill_steps",
+                  "decode_steps", "admissions"):
+            doc = _report()
+            del doc["workloads"]["steady"]["counters"][k]
+            with pytest.raises(ValueError, match=k):
+                schema.validate(doc)
+
+    def test_validator_requires_slo_calibration_provenance(self):
+        doc = _report()
+        assert doc["slo_scale"] == 1.0 and doc["ref_decode_step_s"] == 0.0
+        del doc["slo_scale"]
+        with pytest.raises(ValueError, match="slo_scale"):
+            schema.validate(doc)
+        doc = _report()
+        doc["ref_decode_step_s"] = "fast"
+        with pytest.raises(ValueError, match="ref_decode_step_s"):
+            schema.validate(doc)
+
+    def test_validator_checks_optional_obs_trace_block(self):
+        doc = _report()
+        doc["workloads"]["steady"]["obs_trace"] = {
+            "path": "trace.json", "fingerprint": FP,
+            "schema_version": 1, "n_events": 42}
+        schema.validate(doc)   # well-formed attachment passes
+        doc["workloads"]["steady"]["obs_trace"]["fingerprint"] = "md5:nope"
+        with pytest.raises(ValueError, match="obs_trace.fingerprint"):
+            schema.validate(doc)
+        del doc["workloads"]["steady"]["obs_trace"]["fingerprint"]
+        with pytest.raises(ValueError, match="fingerprint"):
             schema.validate(doc)
 
 
