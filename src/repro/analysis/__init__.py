@@ -1,0 +1,44 @@
+"""``repro.analysis`` — AST-based invariant linter for the repo's unwritten
+contracts.
+
+Three subsystems rest on conventions no runtime test can fully enforce:
+
+* the jitted serving step must stay **pure and retrace-stable** (host
+  side effects inside a traced body run once at trace time and silently
+  disappear from every later call; unhashable jit statics retrace forever);
+* every observability emit site must guard on ``tracer.enabled`` so
+  traced and untraced runs stay **bit-identical** (the PR 7 contract);
+* the kernel registry promises every ``KernelImpl`` an oracle and a
+  conformance row, and schema-versioned artifacts promise their
+  validators and docs **agree on the version**.
+
+This package checks those invariants statically, on the stdlib ``ast``
+only (no third-party deps, so the CI lint lane needs no installs):
+
+* :mod:`repro.analysis.engine` — source loading, suppression comments
+  (``# repro: ignore[rule-name]``), finding model, rule driver;
+* :mod:`repro.analysis.callgraph` — best-effort project call graph rooted
+  at ``jax.jit`` call sites / ``chunk_step`` entry points;
+* :mod:`repro.analysis.rules_jit` — ``jit-purity``, ``retrace-hazard``,
+  ``traced-branch``;
+* :mod:`repro.analysis.rules_obs` — ``tracer-guard``;
+* :mod:`repro.analysis.rules_project` — ``registry-completeness``,
+  ``schema-drift`` (cross-module rules);
+* :mod:`repro.analysis.inventory` — the shared AST inventory (kernel
+  names, conformance rows, schema-version constants) that
+  ``tests/test_conformance.py`` also imports, so the static check and the
+  runtime completeness gate can never disagree on the kernel list;
+* :mod:`repro.analysis.baseline` — committed-findings baseline with an
+  add/expire workflow;
+* :mod:`repro.analysis.cli` — ``python -m repro.analysis [--json]
+  [--baseline FILE] [--update-baseline]``.
+
+See docs/static-analysis.md for the rule catalog and workflows.
+"""
+from repro.analysis.engine import (  # noqa: F401
+    DEFAULT_PATHS,
+    Finding,
+    Project,
+    all_rules,
+    analyze,
+)

@@ -1,0 +1,57 @@
+"""Committed-findings baseline: adopt the linter without fixing the world.
+
+A baseline file is canonical JSON listing finding *keys* (rule + path +
+message — line numbers excluded, so unrelated line churn never
+invalidates an entry).  The CLI splits current findings into **new**
+(fail), **baselined** (tolerated), and reports baseline entries that no
+longer match anything as **expired** (also fail, so the file can only
+shrink honestly); ``--update-baseline`` rewrites the file to exactly the
+current findings — the add/expire round-trip.
+
+Policy (docs/static-analysis.md): the baseline must stay empty for
+``src/repro/`` — core findings get fixed or explicitly suppressed in
+source, never parked.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.analysis.engine import Finding
+
+BASELINE_VERSION = 1
+
+
+def load(path: Path | str) -> list[str]:
+    """Baseline keys, in file order.  Missing file = empty baseline."""
+    p = Path(path)
+    if not p.is_file():
+        return []
+    doc = json.loads(p.read_text())
+    if not isinstance(doc, dict) or doc.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: not a v{BASELINE_VERSION} analysis "
+                         "baseline")
+    entries = doc.get("findings")
+    if not isinstance(entries, list) \
+            or not all(isinstance(e, str) for e in entries):
+        raise ValueError(f"{path}: 'findings' must be a list of keys")
+    return entries
+
+
+def save(path: Path | str, findings: list[Finding]) -> dict:
+    doc = {"version": BASELINE_VERSION,
+           "findings": sorted({f.key for f in findings})}
+    Path(path).write_text(
+        json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    return doc
+
+
+def split(findings: list[Finding], baseline_keys: list[str]
+          ) -> tuple[list[Finding], list[Finding], list[str]]:
+    """(new, baselined, expired_keys)."""
+    keys = set(baseline_keys)
+    new = [f for f in findings if f.key not in keys]
+    old = [f for f in findings if f.key in keys]
+    live = {f.key for f in findings}
+    expired = sorted(k for k in keys if k not in live)
+    return new, old, expired

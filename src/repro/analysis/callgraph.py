@@ -1,0 +1,334 @@
+"""Best-effort project call graph rooted at the jit boundary.
+
+The jit rules need to know which function bodies execute **under a
+tracer** — i.e. are reachable from a ``jax.jit`` call site or from a
+model entry point (``chunk_step``).  Python's dynamism makes a sound
+call graph impossible; this one is deliberately conservative-by-name:
+
+* **roots** — functions decorated ``@jax.jit`` / ``@functools.partial(
+  jax.jit, ...)``; the function or lambda passed to a ``jax.jit(...)``
+  call (including through a local name, e.g. ``step = make(...);
+  jax.jit(step)`` marks ``make``'s nested defs); and any top-level
+  function named ``chunk_step`` (the serving step entry point, jitted by
+  the engine through a lambda);
+* **edges** — direct calls to names resolvable statically: same-module
+  functions, ``from m import f`` symbols, ``mod.f`` through an imported
+  module alias, ``self.m()`` methods of the enclosing class, and nested
+  defs of the enclosing function.  Anything else (calls on call results,
+  dict dispatch, higher-order arguments) is silently not followed.
+
+When a function is reachable its nested ``def``s are reachable too —
+they are constructed (and usually called) at trace time, e.g. Pallas
+``@pl.when`` bodies.
+
+Unresolvable edges mean the purity rules can miss violations behind
+dynamic dispatch; they never cause false positives.  The fixture corpus
+under ``tests/fixtures/analysis/`` pins what is and is not followed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator
+
+from repro.analysis.engine import Project, SourceModule
+
+# Entry points that are jitted indirectly (the serving engine wraps them
+# in jax.jit lambdas; dryrun/train factories close over them).
+ROOT_FUNCTION_NAMES = ("chunk_step",)
+
+_JIT_NAMES = {"jit"}          # from jax import jit
+_PARTIAL_NAMES = {"partial"}  # functools.partial / from functools import partial
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One analyzable function body (def, method, nested def, or a lambda
+    passed straight to ``jax.jit``)."""
+
+    module: SourceModule
+    qualname: str
+    node: ast.AST                  # FunctionDef | AsyncFunctionDef | Lambda
+    class_name: str | None = None  # enclosing class, for self.m() edges
+    is_root: bool = False
+    # For roots that ARE the jitted callable: parameter names bound to
+    # tracers (params minus declared statics).  Name-seeded roots
+    # (chunk_step — jitted through engine lambdas whose closures make
+    # cfg/train static) keep this empty.
+    traced_params: frozenset = frozenset()
+
+    @property
+    def body(self) -> list[ast.stmt]:
+        if isinstance(self.node, ast.Lambda):
+            return [ast.Expr(self.node.body)]
+        return self.node.body
+
+    @property
+    def params(self) -> list[str]:
+        a = self.node.args
+        return [p.arg for p in
+                (a.posonlyargs + a.args + a.kwonlyargs)
+                ] + [p.arg for p in (a.vararg, a.kwarg) if p is not None]
+
+
+def _spec_statics(call: ast.Call, params: list) -> set:
+    """Parameter names a jit call/decorator declares static
+    (``static_argnames`` strings + ``static_argnums`` indices)."""
+    static: set = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) \
+                        and isinstance(sub.value, str):
+                    static.add(sub.value)
+        elif kw.arg == "static_argnums":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) \
+                        and isinstance(sub.value, int) \
+                        and 0 <= sub.value < len(params):
+                    static.add(params[sub.value])
+    return static
+
+
+class ModuleIndex:
+    """Per-module name tables: imports and function definitions."""
+
+    def __init__(self, mod: SourceModule):
+        self.mod = mod
+        # local name -> dotted module ("jax", "repro.models.model_zoo")
+        self.import_modules: dict[str, str] = {}
+        # local name -> (dotted module, symbol)
+        self.import_symbols: dict[str, tuple[str, str]] = {}
+        # qualname -> FuncInfo for every def at any nesting level
+        self.functions: dict[str, FuncInfo] = {}
+        # parent qualname -> direct nested-def qualnames
+        self.nested: dict[str, list[str]] = {}
+        self._walk(mod.tree, prefix="", class_name=None)
+
+    def _walk(self, node: ast.AST, prefix: str, class_name: str | None):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.Import):
+                for alias in child.names:
+                    local = alias.asname or alias.name.split(".")[0]
+                    self.import_modules[local] = (alias.name if alias.asname
+                                                  else alias.name.split(".")[0])
+                    if alias.asname:
+                        self.import_modules[alias.asname] = alias.name
+            elif isinstance(child, ast.ImportFrom):
+                if child.level:
+                    # "from . import x" in pkg/mod.py: level 1 strips the
+                    # module leaf; further levels strip packages.
+                    base = self.mod.name.split(".")[:-child.level]
+                    root = ".".join(base + ([child.module] if child.module
+                                            else []))
+                else:
+                    root = child.module or ""
+                for alias in child.names:
+                    local = alias.asname or alias.name
+                    self.import_symbols[local] = (root, alias.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                self.functions[qual] = FuncInfo(
+                    module=self.mod, qualname=qual, node=child,
+                    class_name=class_name)
+                if prefix:
+                    self.nested.setdefault(prefix.rstrip("."), []).append(qual)
+                self._walk(child, prefix=f"{qual}.", class_name=class_name)
+            elif isinstance(child, ast.ClassDef):
+                self._walk(child, prefix=f"{prefix}{child.name}.",
+                           class_name=child.name)
+            else:
+                self._walk(child, prefix=prefix, class_name=class_name)
+
+    # -- name resolution ----------------------------------------------------
+
+    def top_level(self, name: str) -> FuncInfo | None:
+        return self.functions.get(name)
+
+    def is_module_alias(self, name: str) -> str | None:
+        return self.import_modules.get(name)
+
+    def symbol_target(self, name: str) -> tuple[str, str] | None:
+        return self.import_symbols.get(name)
+
+
+class CallGraph:
+    def __init__(self, project: Project):
+        self.project = project
+        self.indexes: dict[str, ModuleIndex] = {
+            m.relpath: ModuleIndex(m) for m in project.modules}
+        self.roots: list[FuncInfo] = []
+        self._find_roots()
+        self.reachable: dict[tuple[str, str], FuncInfo] = {}
+        for fi in self.roots:
+            self._reach(fi)
+
+    # -- jit detection -------------------------------------------------------
+
+    def _is_jit(self, node: ast.AST, idx: ModuleIndex) -> bool:
+        """Is this expression ``jax.jit`` (or an alias of it)?"""
+        if isinstance(node, ast.Attribute) and node.attr == "jit":
+            v = node.value
+            if isinstance(v, ast.Name) and idx.is_module_alias(v.id) == "jax":
+                return True
+        if isinstance(node, ast.Name):
+            tgt = idx.symbol_target(node.id)
+            return tgt is not None and tgt == ("jax", "jit")
+        return False
+
+    def jit_call_sites(self, idx: ModuleIndex) -> Iterator[ast.Call]:
+        """Every ``jax.jit(...)`` / ``partial(jax.jit, ...)`` Call in the
+        module (shared with the retrace-hazard rule)."""
+        for node in ast.walk(idx.mod.tree):
+            if isinstance(node, ast.Call) and self._jit_of_call(node, idx):
+                yield node
+
+    def _jit_of_call(self, call: ast.Call, idx: ModuleIndex) -> bool:
+        if self._is_jit(call.func, idx):
+            return True
+        # functools.partial(jax.jit, ...) — the decorator spelling.
+        f = call.func
+        is_partial = (
+            (isinstance(f, ast.Attribute) and f.attr == "partial")
+            or (isinstance(f, ast.Name)
+                and (f.id in _PARTIAL_NAMES
+                     or idx.symbol_target(f.id) == ("functools", "partial"))))
+        return (is_partial and call.args
+                and self._is_jit(call.args[0], idx))
+
+    def _find_roots(self):
+        for idx in self.indexes.values():
+            # decorated defs
+            for fi in idx.functions.values():
+                for dec in fi.node.decorator_list:
+                    if self._is_jit(dec, idx):
+                        self._add_root(fi, traced=set(fi.params))
+                    elif isinstance(dec, ast.Call) \
+                            and self._jit_of_call(dec, idx):
+                        self._add_root(
+                            fi, traced=set(fi.params)
+                            - _spec_statics(dec, fi.params))
+            # jax.jit(<fn>, ...) call sites
+            assigned_from = self._factory_bindings(idx)
+            for call in self.jit_call_sites(idx):
+                if not self._is_jit(call.func, idx) or not call.args:
+                    continue
+                arg = call.args[0]
+                if isinstance(arg, ast.Lambda):
+                    fi = FuncInfo(module=idx.mod,
+                                  qualname=f"<lambda:{arg.lineno}>",
+                                  node=arg, class_name=None)
+                    self._add_root(fi, traced=set(fi.params)
+                                   - _spec_statics(call, fi.params))
+                elif isinstance(arg, ast.Name):
+                    fi = idx.top_level(arg.id)
+                    if fi is not None:
+                        self._add_root(fi, traced=set(fi.params)
+                                       - _spec_statics(call, fi.params))
+                    elif arg.id in assigned_from:
+                        # step = make_step(...); jax.jit(step) — the
+                        # factory's nested defs are what actually trace.
+                        self._add_factory_root(assigned_from[arg.id])
+                elif isinstance(arg, ast.Call):
+                    target = self._resolve_call(arg, idx, None)
+                    if target is not None:
+                        self._add_factory_root(target)
+            # named entry points (chunk_step): jitted via engine lambdas
+            # whose closures keep cfg/train static — no param taint.
+            for name in ROOT_FUNCTION_NAMES:
+                fi = idx.top_level(name)
+                if fi is not None:
+                    self._add_root(fi, traced=set())
+
+    def _factory_bindings(self, idx: ModuleIndex) -> dict[str, FuncInfo]:
+        """name -> factory FuncInfo, for ``name = some_fn(...)`` where
+        ``some_fn`` resolves locally or through an import."""
+        out: dict[str, FuncInfo] = {}
+        for node in ast.walk(idx.mod.tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                target = self._resolve_call(node.value, idx, None)
+                if target is None:
+                    continue
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out[t.id] = target
+        return out
+
+    def _add_root(self, fi: FuncInfo, traced: set):
+        if not fi.is_root:
+            fi.is_root = True
+            fi.traced_params = frozenset(traced)
+            self.roots.append(fi)
+
+    def _add_factory_root(self, factory: FuncInfo):
+        idx = self.indexes[factory.module.relpath]
+        for nested in idx.nested.get(factory.qualname, ()):
+            nfi = idx.functions[nested]
+            self._add_root(nfi, traced=set(nfi.params))
+
+    # -- reachability --------------------------------------------------------
+
+    def _key(self, fi: FuncInfo) -> tuple[str, str]:
+        return (fi.module.relpath, fi.qualname)
+
+    def _reach(self, fi: FuncInfo):
+        key = self._key(fi)
+        if key in self.reachable:
+            return
+        self.reachable[key] = fi
+        idx = self.indexes.get(fi.module.relpath)
+        if idx is None:
+            return
+        # nested defs execute at trace time
+        for nested in idx.nested.get(fi.qualname, ()):
+            self._reach(idx.functions[nested])
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Call):
+                target = self._resolve_call(node, idx, fi)
+                if target is not None:
+                    self._reach(target)
+
+    def _resolve_call(self, call: ast.Call, idx: ModuleIndex,
+                      caller: FuncInfo | None) -> FuncInfo | None:
+        f = call.func
+        if isinstance(f, ast.Name):
+            # sibling nested defs, then module scope, then imported symbol
+            if caller is not None:
+                parent = caller.qualname.rsplit(".", 1)[0] \
+                    if "." in caller.qualname else None
+                for scope in (caller.qualname, parent):
+                    if scope is None:
+                        continue
+                    fi = idx.functions.get(f"{scope}.{f.id}")
+                    if fi is not None:
+                        return fi
+            fi = idx.top_level(f.id)
+            if fi is not None:
+                return fi
+            tgt = idx.symbol_target(f.id)
+            if tgt is not None:
+                other = self.project.module_named(tgt[0])
+                if other is not None:
+                    return self.indexes[other.relpath].top_level(tgt[1])
+            return None
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            base = f.value.id
+            if base == "self" and caller is not None and caller.class_name:
+                return idx.top_level(f"{caller.class_name}.{f.attr}")
+            mod_name = idx.is_module_alias(base)
+            if mod_name is None:
+                tgt = idx.symbol_target(base)
+                # "from repro.models import model_zoo" binds a module
+                if tgt is not None:
+                    mod_name = f"{tgt[0]}.{tgt[1]}"
+            if mod_name is not None:
+                other = self.project.module_named(mod_name)
+                if other is not None:
+                    return self.indexes[other.relpath].top_level(f.attr)
+        return None
+
+
+def jit_callgraph(project: Project) -> CallGraph:
+    """The project's (memoized) jit-rooted call graph."""
+    return project.memo("jit_callgraph", lambda: CallGraph(project))

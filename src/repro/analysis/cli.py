@@ -1,0 +1,134 @@
+"""``python -m repro.analysis`` — run the invariant linter.
+
+Exit status: 0 when every finding is baselined and no baseline entry has
+expired; 1 otherwise (new findings, expired baseline entries, or parse
+errors).  ``--json`` prints a machine-readable report (schema below);
+``--update-baseline`` rewrites the baseline to the current findings and
+exits 0.
+
+JSON report schema (``report_version`` 1)::
+
+    {
+      "report_version": 1,
+      "root": "<abs path>",
+      "paths": ["src", "benchmarks", "examples"],
+      "rules": [{"name": ..., "summary": ...}, ...],
+      "findings": [{"rule", "path", "line", "message", "baselined"}, ...],
+      "counts": {"total": N, "new": N, "baselined": N, "expired": N},
+      "expired": ["<baseline key>", ...],
+      "ok": true|false
+    }
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.engine import DEFAULT_PATHS, all_rules, analyze
+
+REPORT_VERSION = 1
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based invariant linter (jit purity, tracer "
+                    "guards, registry/schema completeness) — see "
+                    "docs/static-analysis.md")
+    ap.add_argument("--root", default=".",
+                    help="repo root to analyze (default: cwd)")
+    ap.add_argument("--paths", nargs="+", default=list(DEFAULT_PATHS),
+                    metavar="DIR",
+                    help=f"subtrees to walk (default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--rule", action="append", default=None, metavar="NAME",
+                    help="run only this rule (repeatable)")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="committed-findings baseline (JSON)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline to the current findings and "
+                         "exit 0")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    rules = all_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.name:24s} {r.summary}")
+        return 0
+    if args.rule:
+        known = {r.name for r in rules}
+        unknown = [n for n in args.rule if n not in known]
+        if unknown:
+            print(f"unknown rule(s): {', '.join(unknown)}; "
+                  f"known: {', '.join(sorted(known))}", file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.name in set(args.rule)]
+    if args.update_baseline and not args.baseline:
+        print("--update-baseline requires --baseline", file=sys.stderr)
+        return 2
+
+    root = Path(args.root).resolve()
+    findings = analyze(root, paths=args.paths, rules=rules)
+
+    baseline_keys: list[str] = []
+    if args.baseline:
+        try:
+            baseline_keys = baseline_mod.load(args.baseline)
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"bad baseline: {e}", file=sys.stderr)
+            return 2
+    new, old, expired = baseline_mod.split(findings, baseline_keys)
+
+    if args.update_baseline:
+        baseline_mod.save(args.baseline, findings)
+        print(f"baseline updated: {len(findings)} finding(s) "
+              f"({len(expired)} expired entr{'y' if len(expired) == 1 else 'ies'} dropped)")
+        return 0
+
+    ok = not new and not expired
+    if args.as_json:
+        print(json.dumps({
+            "report_version": REPORT_VERSION,
+            "root": str(root),
+            "paths": list(args.paths),
+            "rules": [{"name": r.name, "summary": r.summary}
+                      for r in rules],
+            "findings": [dict(f.to_dict(), baselined=(f in old))
+                         for f in findings],
+            "counts": {"total": len(findings), "new": len(new),
+                       "baselined": len(old), "expired": len(expired)},
+            "expired": expired,
+            "ok": ok,
+        }, indent=2, sort_keys=True))
+        return 0 if ok else 1
+
+    for f in new:
+        print(f.format())
+    if old:
+        print(f"({len(old)} baselined finding(s) not shown; "
+              "run --json to list them)")
+    for k in expired:
+        print(f"expired baseline entry (fixed? run --update-baseline): {k}")
+    if ok:
+        n = len(findings)
+        print(f"repro.analysis: clean "
+              f"({n} baselined finding(s))" if n else
+              "repro.analysis: clean")
+        return 0
+    print(f"repro.analysis: {len(new)} new finding(s), "
+          f"{len(expired)} expired baseline entr"
+          f"{'y' if len(expired) == 1 else 'ies'}", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

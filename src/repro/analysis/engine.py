@@ -1,0 +1,193 @@
+"""Linter core: source model, suppression comments, findings, rule driver.
+
+The engine is deliberately small.  A :class:`Project` owns parsed
+:class:`SourceModule` objects for every ``.py`` file under the walked
+roots (``src/``, ``benchmarks/``, ``examples/`` by default) plus any file
+a cross-module rule asks for explicitly (e.g. ``tests/test_conformance.py``).
+Rules are plain objects with a ``name``, a one-line ``summary``, and a
+``check(project)`` generator of :class:`Finding`; the driver runs every
+rule, drops findings suppressed by ``# repro: ignore[rule-name]``
+comments, and returns them sorted.
+
+Suppression syntax (see docs/static-analysis.md):
+
+* ``# repro: ignore[rule-a]`` / ``# repro: ignore[rule-a, rule-b]`` on the
+  finding's line suppresses those rules there;
+* ``# repro: ignore-file[rule-a]`` anywhere in a file suppresses the rule
+  for the whole file (use sparingly — prefer line-level).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+_IGNORE_RE = re.compile(r"#\s*repro:\s*ignore\[([^\]]+)\]")
+_IGNORE_FILE_RE = re.compile(r"#\s*repro:\s*ignore-file\[([^\]]+)\]")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    path: str      # repo-relative posix path
+    line: int      # 1-based line of the offending node
+    rule: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Line-independent identity used for baseline matching — findings
+        survive unrelated line churn but not a change to what they say."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class SourceModule:
+    """One parsed source file plus its suppression table."""
+
+    def __init__(self, root: Path, relpath: str):
+        self.relpath = relpath                       # posix, repo-relative
+        self.path = root / relpath
+        self.source = self.path.read_text()
+        self.tree = ast.parse(self.source, filename=relpath)
+        self.lines = self.source.splitlines()
+        self._line_ignores: dict[int, set[str]] = {}
+        self._file_ignores: set[str] = set()
+        for i, text in enumerate(self.lines, start=1):
+            if "#" not in text:
+                continue
+            m = _IGNORE_FILE_RE.search(text)
+            if m:
+                self._file_ignores |= _split_rules(m.group(1))
+                continue
+            m = _IGNORE_RE.search(text)
+            if m:
+                self._line_ignores[i] = _split_rules(m.group(1))
+
+    @property
+    def name(self) -> str:
+        """Dotted module name (``src/repro/obs/trace.py`` → ``repro.obs
+        .trace``) — what an ``import`` of this file binds."""
+        parts = Path(self.relpath).with_suffix("").parts
+        if parts[0] == "src":
+            parts = parts[1:]
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self._file_ignores or "*" in self._file_ignores:
+            return True
+        rules = self._line_ignores.get(line, ())
+        return rule in rules or "*" in rules
+
+    def finding(self, rule: str, node: ast.AST | int, message: str) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 0)
+        return Finding(path=self.relpath, line=line, rule=rule,
+                       message=message)
+
+
+def _split_rules(spec: str) -> set[str]:
+    return {r.strip() for r in spec.split(",") if r.strip()}
+
+
+class Project:
+    """The analyzed tree: walked modules + on-demand extra files."""
+
+    def __init__(self, root: Path | str, paths: Iterable[str] = DEFAULT_PATHS):
+        self.root = Path(root).resolve()
+        self.paths = tuple(paths)
+        self.modules: list[SourceModule] = []
+        self._by_path: dict[str, SourceModule] = {}
+        self._by_name: dict[str, SourceModule] = {}
+        self.parse_errors: list[Finding] = []
+        self._caches: dict[str, object] = {}   # cross-rule memos (callgraph)
+        for sub in self.paths:
+            base = self.root / sub
+            if not base.is_dir():
+                continue
+            for p in sorted(base.rglob("*.py")):
+                if "__pycache__" in p.parts:
+                    continue
+                self._load(p.relative_to(self.root).as_posix())
+
+    def _load(self, relpath: str) -> SourceModule | None:
+        try:
+            mod = SourceModule(self.root, relpath)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            line = getattr(e, "lineno", 0) or 0
+            self.parse_errors.append(Finding(
+                path=relpath, line=line, rule="parse-error",
+                message=f"could not parse: {e.msg if hasattr(e, 'msg') else e}"))
+            return None
+        self.modules.append(mod)
+        self._by_path[relpath] = mod
+        self._by_name[mod.name] = mod
+        return mod
+
+    def module_at(self, relpath: str) -> SourceModule | None:
+        """Module by repo-relative path; parses files outside the walked
+        roots (cross-module rules read ``tests/...``) on demand."""
+        if relpath in self._by_path:
+            return self._by_path[relpath]
+        if (self.root / relpath).is_file():
+            return self._load(relpath)
+        return None
+
+    def module_named(self, name: str) -> SourceModule | None:
+        return self._by_name.get(name)
+
+    def memo(self, key: str, build):
+        """Cross-rule cache (the jit rules share one call graph)."""
+        if key not in self._caches:
+            self._caches[key] = build()
+        return self._caches[key]
+
+
+def all_rules() -> list:
+    """The registered rule corpus, in catalog order."""
+    from repro.analysis import rules_jit, rules_obs, rules_project
+
+    return [
+        rules_jit.JitPurity(),
+        rules_jit.RetraceHazard(),
+        rules_jit.TracedBranch(),
+        rules_obs.TracerGuard(),
+        rules_project.RegistryCompleteness(),
+        rules_project.SchemaDrift(),
+    ]
+
+
+def analyze(root: Path | str, paths: Iterable[str] = DEFAULT_PATHS,
+            rules: Iterable | None = None) -> list[Finding]:
+    """Run ``rules`` (default: all) over the tree; returns sorted findings
+    with suppressions applied.  Unparseable files surface as
+    ``parse-error`` findings rather than aborting the run."""
+    project = Project(root, paths)
+    out: list[Finding] = list(project.parse_errors)
+    for rule in (all_rules() if rules is None else rules):
+        for f in rule.check(project):
+            mod = project.module_at(f.path)
+            if mod is not None and mod.suppressed(f.rule, f.line):
+                continue
+            out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.rule, f.message))
+
+
+def iter_findings(rule, project: Project) -> Iterator[Finding]:
+    """Convenience for tests: one rule, suppressions applied."""
+    for f in rule.check(project):
+        mod = project.module_at(f.path)
+        if mod is None or not mod.suppressed(f.rule, f.line):
+            yield f

@@ -1,0 +1,173 @@
+"""Shared AST inventories: the facts the cross-module rules check.
+
+Everything here is derived **statically** from source text — no imports of
+the target modules — so the linter (and the CI lint lane) needs neither
+jax nor a configured ``PYTHONPATH`` beyond this package, and so
+``tests/test_conformance.py`` can assert that the static view of the
+kernel list agrees with the imported registry: one inventory, consumed by
+both the static ``registry-completeness`` rule and the runtime
+completeness gate, can never let the two drift apart.
+
+Paths are repo-relative and fixed here (single source of truth for the
+rules AND the tests):
+
+* :data:`REGISTRY_PATH` — ``KernelImpl`` classes (``name`` class attr +
+  a ``lower`` method) and their registrations;
+* :data:`CONFORMANCE_PATH` — ``KERNEL_CASES`` rows and the ``ref.*``
+  oracles each row binds to;
+* :data:`ORACLES_PATH` — the oracle functions actually defined;
+* :data:`VERSION_CONSTANTS` — every schema-version constant and the file
+  that owns it.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+REGISTRY_PATH = "src/repro/plan/registry.py"
+ORACLES_PATH = "src/repro/kernels/ref.py"
+CONFORMANCE_PATH = "tests/test_conformance.py"
+
+# (repo-relative path, constant name) for every schema-versioned artifact;
+# `doc_token` is how docs refer to the artifact (schema-drift scans
+# docs/*.md for "<doc_token> ... schema v<N>" and "<doc_token> ...
+# schema_version <N>" style mentions).
+VERSION_CONSTANTS = (
+    ("benchmarks/workloads/schema.py", "SCHEMA_VERSION", "BENCH_e2e"),
+    ("benchmarks/workloads/trace.py", "TRACE_VERSION", "WORKLOAD_TRACE"),
+    ("src/repro/obs/trace.py", "TRACE_SCHEMA_VERSION", "OBS_TRACE"),
+    ("src/repro/plan/plan.py", "PLAN_VERSION", "ModelPlan"),
+)
+
+
+def _parse(root: Path | str, relpath: str) -> ast.Module | None:
+    p = Path(root) / relpath
+    if not p.is_file():
+        return None
+    try:
+        return ast.parse(p.read_text(), filename=relpath)
+    except SyntaxError:
+        return None
+
+
+def registry_kernel_classes(root: Path | str) -> dict[str, str]:
+    """kernel name -> class name, for every class in the registry module
+    that declares a ``name`` string class attribute and a ``lower``
+    method (the ``KernelImpl`` shape)."""
+    tree = _parse(root, REGISTRY_PATH)
+    out: dict[str, str] = {}
+    if tree is None:
+        return out
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        kname = None
+        has_lower = False
+        for stmt in node.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name) and t.id == "name" \
+                            and isinstance(stmt.value, ast.Constant) \
+                            and isinstance(stmt.value.value, str):
+                        kname = stmt.value.value
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and stmt.name == "lower":
+                has_lower = True
+        if kname is not None and has_lower:
+            out[kname] = node.name
+    return out
+
+
+def registry_registered_classes(root: Path | str) -> set[str]:
+    """Class names actually passed to ``register(...)`` — directly or via
+    the module-bottom ``for _impl in (A(), B(), ...)`` idiom."""
+    tree = _parse(root, REGISTRY_PATH)
+    out: set[str] = set()
+    if tree is None:
+        return out
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "register":
+            for arg in node.args:
+                if isinstance(arg, ast.Call) \
+                        and isinstance(arg.func, ast.Name):
+                    out.add(arg.func.id)
+        if isinstance(node, ast.For) and isinstance(node.iter,
+                                                    (ast.Tuple, ast.List)):
+            calls_register = any(
+                isinstance(c, ast.Call) and isinstance(c.func, ast.Name)
+                and c.func.id == "register" for c in ast.walk(node))
+            if not calls_register:
+                continue
+            for el in node.iter.elts:
+                if isinstance(el, ast.Call) \
+                        and isinstance(el.func, ast.Name):
+                    out.add(el.func.id)
+    return out
+
+
+def registry_kernel_names(root: Path | str) -> tuple[str, ...]:
+    """The static kernel inventory: names of registered KernelImpl classes
+    (what ``repro.plan.registry.names()`` returns at runtime)."""
+    classes = registry_kernel_classes(root)
+    registered = registry_registered_classes(root)
+    return tuple(sorted(n for n, cls in classes.items()
+                        if cls in registered))
+
+
+def conformance_kernel_rows(root: Path | str) -> dict[str, int]:
+    """``KERNEL_CASES`` keys -> line number, from the conformance suite."""
+    tree = _parse(root, CONFORMANCE_PATH)
+    out: dict[str, int] = {}
+    if tree is None:
+        return out
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "KERNEL_CASES"
+                        for t in node.targets) \
+                and isinstance(node.value, ast.Dict):
+            for k in node.value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out[k.value] = k.lineno
+    return out
+
+
+def conformance_oracle_refs(root: Path | str) -> dict[str, int]:
+    """``ref.<fn>`` attributes the conformance suite reads -> line."""
+    tree = _parse(root, CONFORMANCE_PATH)
+    out: dict[str, int] = {}
+    if tree is None:
+        return out
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "ref":
+            out.setdefault(node.attr, node.lineno)
+    return out
+
+
+def oracle_functions(root: Path | str) -> set[str]:
+    """Top-level function names defined by the oracle module."""
+    tree = _parse(root, ORACLES_PATH)
+    if tree is None:
+        return set()
+    return {n.name for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def version_constant(root: Path | str, relpath: str,
+                     const: str) -> tuple[int | None, int | None]:
+    """(value, line) of a module-level integer constant; (None, None) when
+    missing or not a plain int literal."""
+    tree = _parse(root, relpath)
+    if tree is None:
+        return None, None
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == const:
+                    if isinstance(node.value, ast.Constant) \
+                            and isinstance(node.value.value, int):
+                        return node.value.value, node.lineno
+                    return None, node.lineno
+    return None, None

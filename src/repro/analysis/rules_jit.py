@@ -1,0 +1,315 @@
+"""Rules for the jit boundary: purity, retrace stability, traced branches.
+
+All three rules scope their checks to functions the
+:mod:`repro.analysis.callgraph` proves reachable from a ``jax.jit`` call
+site (or a ``chunk_step`` entry point) — host-side engine code is free to
+print, mutate, and draw numpy RNG; code under a tracer is not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.callgraph import FuncInfo, jit_callgraph
+from repro.analysis.engine import Finding, Project
+
+# jnp-producing namespaces for the traced-branch taint (the repo idiom:
+# ``import jax``, ``import jax.numpy as jnp``).
+_TRACED_NAMESPACES = {"jnp", "jax"}
+
+# Reads of these attributes are static at trace time even on tracers.
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "name"}
+
+# Builtins whose result is static (or that never concretize a tracer).
+_STATIC_CALLS = {"len", "isinstance", "issubclass", "hasattr", "getattr",
+                 "type", "range", "enumerate", "zip"}
+
+# jnp/jax functions that return static Python values even on tracers —
+# branching on them is legitimate (`if jnp.ndim(cache_len) == 0:`).
+_STATIC_QUERIES = {"ndim", "shape", "size", "result_type", "issubdtype",
+                   "iscomplexobj", "isdtype"}
+
+
+def _dotted(node: ast.AST) -> tuple[str, ...] | None:
+    """``a.b.c`` → ("a", "b", "c"); None for non-name chains."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def walk_shallow(root: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body WITHOUT descending into nested ``def``s —
+    those are separate reachable entries in the call graph (lambdas and
+    comprehensions, which execute inline under the trace, are descended)."""
+    stack = list(ast.iter_child_nodes(root))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _numpy_aliases(idx) -> set[str]:
+    """Local names bound to the numpy module (``np``, ``numpy``, ...)."""
+    out = set()
+    for local, mod in idx.import_modules.items():
+        if mod == "numpy" or mod.startswith("numpy."):
+            out.add(local)
+    return out
+
+
+class JitPurity:
+    """Host side effects inside jit-reachable bodies.
+
+    Flags, inside any function reachable from the jit boundary:
+
+    * ``print(...)`` — runs once at trace time, then never again;
+    * ``np.*`` / ``numpy.*`` calls **fed a traced value** — they
+      constant-fold it or raise ``TracerArrayConversionError`` at
+      retrace.  numpy over static shapes/constants (LUT pattern tables,
+      ``np.arange(1 << c)``) is the intended constant-folding idiom and
+      is not flagged;
+    * host RNG (``random.*``, ``np.random.*``) — a fresh draw per trace,
+      frozen thereafter: silent nondeterminism across retraces;
+    * ``global`` / ``nonlocal`` declarations and attribute-store mutation
+      (``obj.attr = ...``, ``obj.attr += ...``) — trace-time mutation the
+      compiled computation will not repeat.
+
+    Functional ``.at[...].set`` updates and Pallas ref subscript stores
+    (``o_ref[...] = ...``) are pure and not flagged.
+    """
+
+    name = "jit-purity"
+    summary = "host side effects inside jit-reachable functions"
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        cg = jit_callgraph(project)
+        for fi in cg.reachable.values():
+            idx = cg.indexes[fi.module.relpath]
+            yield from self._check_body(fi, _numpy_aliases(idx))
+
+    def _check_body(self, fi: FuncInfo, np_names: set[str]
+                    ) -> Iterator[Finding]:
+        mod = fi.module
+        where = f"jit-reachable `{fi.qualname}`"
+        tainted = _tainted_names(fi)
+        for node in walk_shallow(fi.node):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                kw = "global" if isinstance(node, ast.Global) else "nonlocal"
+                yield mod.finding(self.name, node,
+                                  f"{where} declares `{kw} "
+                                  f"{', '.join(node.names)}`: trace-time "
+                                  "mutation of outer state")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute):
+                        d = _dotted(t)
+                        tgt = ".".join(d) if d else f"<expr>.{t.attr}"
+                        yield mod.finding(
+                            self.name, node,
+                            f"{where} mutates attribute `{tgt}`: runs once "
+                            "at trace time, invisible to later calls")
+            elif isinstance(node, ast.Call):
+                yield from self._check_call(mod, node, np_names, where,
+                                            tainted)
+
+    def _check_call(self, mod, call: ast.Call, np_names: set[str],
+                    where: str, tainted: set[str]) -> Iterator[Finding]:
+        f = call.func
+        if isinstance(f, ast.Name) and f.id == "print":
+            yield mod.finding(self.name, call,
+                              f"{where} calls `print`: executes at trace "
+                              "time only")
+            return
+        d = _dotted(f)
+        if d is None or len(d) < 2:
+            return
+        head = d[0]
+        if head == "random" or (head in np_names and d[1] == "random"):
+            yield mod.finding(self.name, call,
+                              f"{where} draws host RNG `{'.'.join(d)}`: "
+                              "sampled once at trace time, frozen into the "
+                              "compiled program")
+        elif head in np_names and any(
+                _expr_tainted(a, tainted)
+                for a in list(call.args)
+                + [kw.value for kw in call.keywords]):
+            yield mod.finding(self.name, call,
+                              f"{where} calls `{'.'.join(d)}` on a traced "
+                              "value: numpy constant-folds it at trace time "
+                              "(or fails on tracers); use jnp")
+
+
+class RetraceHazard:
+    """jit configurations that retrace more than they should.
+
+    * ``static_argnums=[...]`` / ``static_argnames=[...]`` given as a
+      mutable ``list``/``set``/``dict`` display — use a tuple, so the spec
+      itself can never be mutated between calls;
+    * ``@jax.jit`` directly on a method (first parameter ``self``/``cls``)
+      — every instance retraces, and the compilation cache pins the
+      instance alive;
+    * ``jax.jit(lambda ...)`` whose body reads ``self.<attr>`` — the jitted
+      closure captures mutable instance state at trace time; later
+      mutations silently do not retrigger a trace.
+    """
+
+    name = "retrace-hazard"
+    summary = "unhashable/mutable jit statics and self-closures"
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        cg = jit_callgraph(project)
+        for idx in cg.indexes.values():
+            mod = idx.mod
+            for fi in idx.functions.values():
+                if fi.class_name is None:
+                    continue
+                params = fi.params
+                if not params or params[0] not in ("self", "cls"):
+                    continue
+                for dec in fi.node.decorator_list:
+                    if cg._is_jit(dec, idx) or (
+                            isinstance(dec, ast.Call)
+                            and cg._jit_of_call(dec, idx)):
+                        yield mod.finding(
+                            self.name, fi.node,
+                            f"`@jax.jit` on method `{fi.qualname}`: "
+                            f"`{params[0]}` becomes a jit argument — every "
+                            "instance retraces and the compilation cache "
+                            "pins it; jit a free function instead")
+            for call in cg.jit_call_sites(idx):
+                for kw in call.keywords:
+                    if kw.arg in ("static_argnums", "static_argnames") \
+                            and isinstance(kw.value,
+                                           (ast.List, ast.Set, ast.Dict)):
+                        kind = type(kw.value).__name__.lower()
+                        yield mod.finding(
+                            self.name, kw.value,
+                            f"`{kw.arg}` passed as a mutable {kind}: "
+                            "use a tuple so the static spec is hashable "
+                            "and immutable")
+                if cg._is_jit(call.func, idx) and call.args \
+                        and isinstance(call.args[0], ast.Lambda):
+                    for sub in ast.walk(call.args[0].body):
+                        if isinstance(sub, ast.Attribute) \
+                                and isinstance(sub.value, ast.Name) \
+                                and sub.value.id == "self":
+                            yield mod.finding(
+                                self.name, call,
+                                "jitted lambda closes over mutable `self."
+                                f"{sub.attr}`: captured at trace time, "
+                                "mutations never retrigger a trace — pass "
+                                "it as an argument")
+                            break
+
+
+class TracedBranch:
+    """Python control flow on traced array values inside jitted bodies.
+
+    Inside jit-reachable functions, an ``if``/``while`` (or ``assert``)
+    whose test derives from a traced array forces ``bool()`` on a tracer —
+    ``TracerBoolConversionError`` at best, silent trace-time
+    specialization at worst.  Taint sources are ``jnp.*``/``jax.*`` calls
+    and (for jit ROOT functions) the non-static parameters; taint flows
+    through local assignments, arithmetic, comparisons, and subscripts.
+    Static reads stay branchable: ``x is None``, ``isinstance``, ``len``,
+    and ``.shape``/``.ndim``/``.dtype`` never concretize a tracer, and
+    branching on config (``if cfg.family == ...``) is untouched.  The fix
+    is ``jax.lax.cond`` / ``jnp.where`` / ``jax.lax.while_loop``.
+    """
+
+    name = "traced-branch"
+    summary = "Python if/while on traced array values in jitted bodies"
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        cg = jit_callgraph(project)
+        for fi in cg.reachable.values():
+            yield from self._check_fn(fi)
+
+    def _check_fn(self, fi: FuncInfo) -> Iterator[Finding]:
+        tainted = _tainted_names(fi)
+        mod = fi.module
+        for node in walk_shallow(fi.node):
+            test = None
+            kind = None
+            if isinstance(node, (ast.If, ast.While)):
+                test, kind = node.test, type(node).__name__.lower()
+            elif isinstance(node, ast.Assert):
+                test, kind = node.test, "assert"
+            if test is None or not _expr_tainted(test, tainted):
+                continue
+            yield mod.finding(
+                self.name, node,
+                f"jit-reachable `{fi.qualname}` branches (`{kind}`) on a "
+                "traced array value: concretizes a tracer — use "
+                "jax.lax.cond/jnp.where (or jax.lax.while_loop)")
+
+
+def _tainted_names(fi: FuncInfo) -> set[str]:
+    """Local names bound to traced values inside ``fi``'s body.
+
+    A jitted root's parameters ARE tracers (minus declared statics); the
+    callgraph computed that set at root-marking time.  Taint then flows
+    through local assignments — two passes so taint introduced later in
+    the body reaches earlier reads in loops (the bodies are small).
+    """
+    tainted: set[str] = set(fi.traced_params)
+    tainted.discard("self")
+    for _ in range(2):
+        for node in walk_shallow(fi.node):
+            if isinstance(node, ast.Assign) \
+                    and _expr_tainted(node.value, tainted):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+            elif isinstance(node, ast.AugAssign) \
+                    and isinstance(node.target, ast.Name) \
+                    and _expr_tainted(node.value, tainted):
+                tainted.add(node.target.id)
+    return tainted
+
+
+def _expr_tainted(expr: ast.AST, tainted: set[str]) -> bool:
+    """Does evaluating ``expr`` produce a traced value (conservatively,
+    with static reads — shape/ndim/is-None/isinstance/len — exempted)?"""
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    if isinstance(expr, ast.Constant):
+        return False
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in _STATIC_ATTRS:
+            return False
+        return _expr_tainted(expr.value, tainted)
+    if isinstance(expr, ast.Subscript):
+        return _expr_tainted(expr.value, tainted)
+    if isinstance(expr, ast.Call):
+        f = expr.func
+        if isinstance(f, ast.Name) and f.id in _STATIC_CALLS:
+            return False
+        d = _dotted(f)
+        if d is not None and d[0] in _TRACED_NAMESPACES:
+            return d[-1] not in _STATIC_QUERIES
+        # method calls / other callables: tainted receiver or arguments
+        # propagate (x.any(), bool(x), float(jnp.sum(x)))
+        parts = ([f.value] if isinstance(f, ast.Attribute) else []) \
+            + list(expr.args) + [kw.value for kw in expr.keywords]
+        return any(_expr_tainted(a, tainted) for a in parts)
+    if isinstance(expr, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+            return False
+        return any(_expr_tainted(e, tainted)
+                   for e in [expr.left] + list(expr.comparators))
+    if isinstance(expr, (ast.BoolOp, ast.BinOp, ast.UnaryOp, ast.IfExp,
+                         ast.Tuple, ast.List, ast.Set, ast.Starred)):
+        return any(_expr_tainted(c, tainted)
+                   for c in ast.iter_child_nodes(expr)
+                   if isinstance(c, ast.expr))
+    return False

@@ -1,0 +1,177 @@
+"""``tracer-guard`` — every observability emit site must be dominated by a
+``tracer.enabled`` check.
+
+The PR 7 contract (docs/observability.md): a tracing-off engine pays one
+attribute read per potential event and its counters stay **bit-identical**
+to an untraced run.  That only holds if no emit call's *argument dicts*
+are ever built on the disabled path — so every call to an emit method
+(``begin``/``end``/``mark``/``instant``/``step``) on a tracer must sit
+under an ``if <tracer>.enabled:`` guard (or after an
+``if not <tracer>.enabled: return`` early exit).
+
+What counts as "a tracer" is resolved per function, by name shape:
+
+* an attribute chain ending ``.tracer`` (``self.tracer``, ``engine.kv
+  .tracer``);
+* a parameter or local named ``tracer``;
+* a local alias assigned from either (``tr = self.tracer``), including
+  through a conditional expression (``NULL_TRACER if x is None else x``
+  does **not** alias — only reads OF a tracer do).
+
+Guard recognition (dominance, approximated syntactically):
+
+* ``if <guard>:`` where the test is an ``.enabled`` read on a recognized
+  tracer, possibly inside an ``and`` conjunction (``if added and
+  tr.enabled:``) — the body is guarded, the ``else`` is NOT;
+* ``if not <guard>: return/continue/raise/break`` — statements after the
+  ``if`` in the same block are guarded.
+
+``or``-disjunctions do not guard (either side may be false).  Non-emit
+methods (``reset``, ``save``, ``to_perfetto``) are exempt: they are
+lifecycle/export calls, no-ops or explicit on the null tracer.  Classes
+whose name contains ``Tracer`` (the recorder implementations themselves)
+are skipped.  Suppress intentional unguarded emits with
+``# repro: ignore[tracer-guard]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import Finding, Project, SourceModule
+
+EMIT_METHODS = ("begin", "end", "mark", "instant", "step")
+
+
+def _is_tracer_expr(node: ast.AST, aliases: set[str]) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in aliases or node.id == "tracer"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "tracer"
+    return False
+
+
+def _enabled_read(node: ast.AST, aliases: set[str]) -> bool:
+    """``<tracer>.enabled``"""
+    return (isinstance(node, ast.Attribute) and node.attr == "enabled"
+            and _is_tracer_expr(node.value, aliases))
+
+
+def _test_guards(test: ast.AST, aliases: set[str]) -> bool:
+    """Does this if-test establish the guard?  ``.enabled`` directly or as
+    one operand of an ``and`` conjunction (recursively); ``or`` never."""
+    if _enabled_read(test, aliases):
+        return True
+    if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.And):
+        return any(_test_guards(v, aliases) for v in test.values)
+    return False
+
+
+def _test_rejects(test: ast.AST, aliases: set[str]) -> bool:
+    """``not <tracer>.enabled`` (early-exit spelling)."""
+    return (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)
+            and _test_guards(test.operand, aliases))
+
+
+def _exits(stmt: ast.stmt) -> bool:
+    return isinstance(stmt, (ast.Return, ast.Continue, ast.Break, ast.Raise))
+
+
+class TracerGuard:
+    name = "tracer-guard"
+    summary = "tracer emit sites not dominated by a tracer.enabled check"
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for mod in project.modules:
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: SourceModule) -> Iterator[Finding]:
+        for fn in self._functions(mod.tree):
+            aliases = self._aliases(fn)
+            yield from self._scan_block(mod, fn.body, aliases, guarded=False)
+
+    def _functions(self, node: ast.AST):
+        """Every function/method — except inside ``*Tracer*`` classes (the
+        recorder implementations ARE the emit machinery)."""
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef) and "Tracer" in child.name:
+                continue
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child
+            yield from self._functions(child)
+
+    def _aliases(self, fn: ast.AST) -> set[str]:
+        """Local names that hold a tracer in this function."""
+        aliases: set[str] = set()
+        for _ in range(2):       # transitive aliases (rare but cheap)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Assign):
+                    continue
+                v = node.value
+                src = (_is_tracer_expr(v, aliases)
+                       or (isinstance(v, ast.IfExp)
+                           and (_is_tracer_expr(v.body, aliases)
+                                or _is_tracer_expr(v.orelse, aliases))))
+                if src:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            aliases.add(t.id)
+        return aliases
+
+    def _scan_block(self, mod: SourceModule, body: list, aliases: set[str],
+                    guarded: bool) -> Iterator[Finding]:
+        rest_guarded = guarded
+        for stmt in body:
+            if isinstance(stmt, ast.If):
+                body_guarded = rest_guarded or _test_guards(stmt.test, aliases)
+                yield from self._scan_block(mod, stmt.body, aliases,
+                                            body_guarded)
+                yield from self._scan_block(mod, stmt.orelse, aliases,
+                                            rest_guarded)
+                if (_test_rejects(stmt.test, aliases) and stmt.body
+                        and _exits(stmt.body[-1])):
+                    rest_guarded = True
+                continue
+            # expressions of this statement (incl. loop/with headers)
+            yield from self._scan_exprs(mod, stmt, aliases, rest_guarded)
+            for child_body in self._nested_blocks(stmt):
+                yield from self._scan_block(mod, child_body, aliases,
+                                            rest_guarded)
+
+    def _nested_blocks(self, stmt: ast.stmt):
+        # nested defs/classes are separate entries in _functions()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        for attr in ("body", "orelse", "finalbody"):
+            blk = getattr(stmt, attr, None)
+            if blk:
+                yield blk
+        for h in getattr(stmt, "handlers", ()) or ():
+            yield h.body
+
+    def _scan_exprs(self, mod: SourceModule, stmt: ast.stmt,
+                    aliases: set[str], guarded: bool) -> Iterator[Finding]:
+        if guarded or isinstance(stmt, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef, ast.ClassDef)):
+            return
+        # this statement's own expressions only, not nested blocks
+        for node in ast.iter_child_nodes(stmt):
+            if isinstance(node, ast.stmt):
+                continue
+            yield from self._scan_call_tree(mod, node, aliases)
+
+    def _scan_call_tree(self, mod: SourceModule, node: ast.AST,
+                        aliases: set[str]) -> Iterator[Finding]:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            f = sub.func
+            if isinstance(f, ast.Attribute) and f.attr in EMIT_METHODS \
+                    and _is_tracer_expr(f.value, aliases):
+                tgt = ast.unparse(f) if hasattr(ast, "unparse") else f.attr
+                yield mod.finding(
+                    self.name, sub,
+                    f"tracer emit `{tgt}(...)` not guarded by "
+                    "`tracer.enabled`: builds event args on the disabled "
+                    "path and breaks traced/untraced bit-identity")

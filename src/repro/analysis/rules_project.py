@@ -1,0 +1,185 @@
+"""Cross-module rules: registry completeness and schema-version drift.
+
+Unlike the jit/tracer rules these reason about *pairs* of files — the
+kernel registry vs its conformance suite and oracle module, and each
+schema-version constant vs the validators and docs that cite it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterator
+
+from repro.analysis import inventory
+from repro.analysis.engine import Finding, Project
+
+_VERSION_FIELD_RE = re.compile(r"version", re.IGNORECASE)
+
+# docs mentions like "BENCH_e2e schema v2" / "OBS_TRACE ... schema_version
+# 1": a kind token followed (within the same sentence-ish window) by a
+# version literal.
+_DOC_VERSION_RE = re.compile(
+    r"schema[ _-]v(?:ersion)?[:= ]*(\d+)", re.IGNORECASE)
+_DOC_WINDOW = 160   # chars back from the version literal to find the kind
+
+
+class RegistryCompleteness:
+    """Every registered ``KernelImpl`` must have a conformance row and a
+    resolvable oracle.
+
+    Statically cross-checks three files (paths in
+    :mod:`repro.analysis.inventory`):
+
+    * every kernel class with a ``name``/``lower`` is actually
+      ``register(...)``-ed (a defined-but-unregistered kernel silently
+      vanishes from plans);
+    * the registry's kernel names == ``KERNEL_CASES`` rows in
+      ``tests/test_conformance.py`` (missing row = kernel ships without an
+      equivalence contract; stale row = the suite tests a ghost);
+    * every ``ref.<fn>`` oracle the suite binds to exists in
+      ``src/repro/kernels/ref.py``.
+
+    ``tests/test_conformance.py`` imports the same inventory and asserts
+    it against the *imported* registry, so this static check and the
+    runtime completeness gate cannot disagree on the kernel list.
+    """
+
+    name = "registry-completeness"
+    summary = "kernel registry vs conformance rows vs oracles"
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        root = project.root
+        reg_mod = project.module_at(inventory.REGISTRY_PATH)
+        conf_mod = project.module_at(inventory.CONFORMANCE_PATH)
+        if reg_mod is None or conf_mod is None:
+            # nothing to cross-check in this tree (fixture projects)
+            return
+        classes = inventory.registry_kernel_classes(root)
+        registered = inventory.registry_registered_classes(root)
+        kernels = set(inventory.registry_kernel_names(root))
+        rows = inventory.conformance_kernel_rows(root)
+
+        for kname, cls in sorted(classes.items()):
+            if cls not in registered:
+                yield reg_mod.finding(
+                    self.name, self._class_line(reg_mod, cls),
+                    f"kernel class `{cls}` (name={kname!r}) defines the "
+                    "KernelImpl shape but is never register()-ed: it can "
+                    "never be planned or served")
+        for kname in sorted(kernels - set(rows)):
+            yield conf_mod.finding(
+                self.name, 1,
+                f"registered kernel {kname!r} has no KERNEL_CASES row in "
+                "tests/test_conformance.py: it ships without an "
+                "equivalence contract")
+        for kname in sorted(set(rows) - kernels):
+            yield conf_mod.finding(
+                self.name, rows[kname],
+                f"KERNEL_CASES row {kname!r} matches no registered kernel: "
+                "stale conformance row")
+        oracles = inventory.oracle_functions(root)
+        for fn, line in sorted(inventory.conformance_oracle_refs(root)
+                               .items()):
+            if fn not in oracles:
+                yield conf_mod.finding(
+                    self.name, line,
+                    f"conformance suite binds oracle `ref.{fn}` but "
+                    f"{inventory.ORACLES_PATH} does not define it")
+
+    def _class_line(self, mod, cls: str) -> int:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef) and node.name == cls:
+                return node.lineno
+        return 1
+
+
+class SchemaDrift:
+    """Schema-version constants must match their validators and docs.
+
+    For every constant in :data:`repro.analysis.inventory
+    .VERSION_CONSTANTS`:
+
+    * the constant exists in its module as a plain int literal;
+    * no walked module compares a ``*version*``-named field against a
+      **bare int literal** (``doc["schema_version"] != 2``) — validators
+      must compare against the named constant, which is what makes a bump
+      a one-line change;
+    * any ``docs/*.md`` mention of the artifact's kind token followed by a
+      ``schema v<N>`` literal must cite the current version.
+    """
+
+    name = "schema-drift"
+    summary = "schema-version constants vs validators and docs"
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        root = project.root
+        tokens: dict[str, tuple[str, int]] = {}
+        present = 0
+        for relpath, const, doc_token in inventory.VERSION_CONSTANTS:
+            mod = project.module_at(relpath)
+            if mod is None:
+                continue
+            present += 1
+            value, line = inventory.version_constant(root, relpath, const)
+            if value is None:
+                yield mod.finding(
+                    self.name, line or 1,
+                    f"expected module-level int constant `{const}` in "
+                    f"{relpath} (schema-versioned artifact)")
+            else:
+                tokens[doc_token] = (const, value)
+        if not present:
+            return
+        yield from self._literal_comparisons(project)
+        yield from self._doc_mentions(project, tokens)
+
+    def _literal_comparisons(self, project: Project) -> Iterator[Finding]:
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Compare):
+                    continue
+                sides = [node.left] + list(node.comparators)
+                named = [s for s in sides if self._is_version_field(s)]
+                literals = [s for s in sides
+                            if isinstance(s, ast.Constant)
+                            and isinstance(s.value, int)
+                            and not isinstance(s.value, bool)]
+                if named and literals:
+                    yield mod.finding(
+                        self.name, node,
+                        "version field compared against a bare int literal "
+                        f"({literals[0].value}): compare against the named "
+                        "schema-version constant so a bump is one edit")
+
+    def _is_version_field(self, node: ast.AST) -> bool:
+        """``x["schema_version"]`` / ``x.schema_version`` — but not a
+        bare Name (locals named `version` compare against ints
+        legitimately)."""
+        if isinstance(node, ast.Subscript):
+            sl = node.slice
+            return (isinstance(sl, ast.Constant)
+                    and isinstance(sl.value, str)
+                    and _VERSION_FIELD_RE.search(sl.value) is not None)
+        if isinstance(node, ast.Attribute):
+            return _VERSION_FIELD_RE.search(node.attr) is not None
+        return False
+
+    def _doc_mentions(self, project: Project,
+                      tokens: dict[str, tuple[str, int]]
+                      ) -> Iterator[Finding]:
+        docs = sorted((project.root / "docs").glob("*.md")) \
+            if (project.root / "docs").is_dir() else []
+        for doc in docs:
+            text = doc.read_text()
+            rel = doc.relative_to(project.root).as_posix()
+            for m in _DOC_VERSION_RE.finditer(text):
+                cited = int(m.group(1))
+                window = text[max(0, m.start() - _DOC_WINDOW):m.start()]
+                for token, (const, value) in tokens.items():
+                    if token in window and cited != value:
+                        line = text.count("\n", 0, m.start()) + 1
+                        yield Finding(
+                            path=rel, line=line, rule=self.name,
+                            message=f"doc cites {token} schema v{cited} "
+                                    f"but {const} is {value}")

@@ -32,11 +32,14 @@ def activate(plan):
         yield current()
         return
     prev = current()
-    _STATE.plan = plan
+    # Deliberate trace-time mutation: plan dispatch IS a trace-time
+    # constant (shapes are static), so the thread-local install/restore
+    # is the mechanism, not a leak.
+    _STATE.plan = plan  # repro: ignore[jit-purity]
     try:
         yield plan
     finally:
-        _STATE.plan = prev
+        _STATE.plan = prev  # repro: ignore[jit-purity]
 
 
 def planned(k: int, m: int, n: int):

@@ -1,0 +1,24 @@
+"""jit-purity positive fixture: five host side effects in a jitted body."""
+import random
+
+import jax
+import numpy as np
+
+STATE = {"traces": 0}
+
+
+class Holder:
+    count = 0
+
+
+H = Holder()
+
+
+@jax.jit
+def step(x):
+    global STATE
+    print("tracing")
+    H.count = 1
+    r = random.random()
+    y = np.abs(x)
+    return y + r

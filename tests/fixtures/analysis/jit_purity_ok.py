@@ -1,0 +1,24 @@
+"""jit-purity negative fixture: numpy constant tables over static values
+and host-side prints are the intended idioms — no findings."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def _table(c):
+    # numpy over a static int: deliberate trace-time constant folding
+    return np.arange(1 << c)
+
+
+@jax.jit
+def step(x):
+    t = jnp.asarray(_table(4))
+    return x + t
+
+
+def host_driver():
+    print("host side is free to print")
+    return step(jnp.zeros((4,)))

@@ -1,0 +1,2 @@
+def dense_ref(t, x):
+    return None

@@ -1,0 +1,29 @@
+"""registry-completeness positive fixture: one unregistered kernel class,
+one registered kernel with no conformance row."""
+
+_REGISTRY = {}
+
+
+def register(impl):
+    _REGISTRY[impl.name] = impl
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+class Dense:
+    name = "dense"
+
+    def lower(self, fz):
+        return None
+
+
+class Ghost:
+    name = "ghost"
+
+    def lower(self, fz):
+        return None
+
+
+register(Dense())

@@ -1,0 +1,5 @@
+from repro.kernels import ref
+
+KERNEL_CASES = {
+    "stale": dict(oracle=ref.missing_ref),
+}

@@ -1,0 +1,23 @@
+"""registry-completeness negative fixture: the for-loop registration idiom,
+every kernel rowed and oracled — no findings."""
+
+_REGISTRY = {}
+
+
+def register(impl):
+    _REGISTRY[impl.name] = impl
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+class Dense:
+    name = "dense"
+
+    def lower(self, fz):
+        return None
+
+
+for _impl in (Dense(),):
+    register(_impl)

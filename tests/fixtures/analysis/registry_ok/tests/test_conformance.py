@@ -1,0 +1,5 @@
+from repro.kernels import ref
+
+KERNEL_CASES = {
+    "dense": dict(oracle=ref.dense_ref),
+}

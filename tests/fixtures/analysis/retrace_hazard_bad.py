@@ -1,0 +1,21 @@
+"""retrace-hazard positive fixture: method jit, self-closure, list statics."""
+import jax
+
+
+def fn(n, x):
+    return x + n
+
+
+class Engine:
+    def __init__(self):
+        self.scale = 2.0
+
+    @jax.jit
+    def step(self, x):
+        return x * 2
+
+    def build(self):
+        return jax.jit(lambda x: x * self.scale)
+
+
+g = jax.jit(fn, static_argnums=[0])

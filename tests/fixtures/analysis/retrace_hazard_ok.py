@@ -1,0 +1,14 @@
+"""retrace-hazard negative fixture: tuple statics, free-function jit,
+closures over immutable locals — no findings."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def fn(n, x):
+    return x + n
+
+
+def build(scale):
+    return jax.jit(lambda x: x * scale)

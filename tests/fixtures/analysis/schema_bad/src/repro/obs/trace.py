@@ -1,0 +1,9 @@
+"""schema-drift positive fixture: a validator comparing the version field
+against a bare int literal (the docs mismatch lives in docs/format.md)."""
+
+TRACE_SCHEMA_VERSION = 1
+
+
+def validate(doc):
+    if doc["schema_version"] != 1:
+        raise ValueError("bad trace")

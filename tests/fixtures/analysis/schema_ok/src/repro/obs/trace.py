@@ -1,0 +1,9 @@
+"""schema-drift negative fixture: validator compares against the named
+constant, docs cite the current version — no findings."""
+
+TRACE_SCHEMA_VERSION = 1
+
+
+def validate(doc):
+    if doc["schema_version"] != TRACE_SCHEMA_VERSION:
+        raise ValueError("bad trace")

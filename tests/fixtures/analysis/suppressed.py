@@ -1,0 +1,17 @@
+"""Suppression fixture: the attribute store is ignored on its line, the
+print is not."""
+import jax
+
+
+class Holder:
+    count = 0
+
+
+H = Holder()
+
+
+@jax.jit
+def step(x):
+    H.count = 1  # repro: ignore[jit-purity]
+    print("once")
+    return x

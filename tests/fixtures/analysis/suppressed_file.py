@@ -1,0 +1,9 @@
+"""File-level suppression fixture: every jit-purity finding here is off."""
+# repro: ignore-file[jit-purity]
+import jax
+
+
+@jax.jit
+def step(x):
+    print("once")
+    return x

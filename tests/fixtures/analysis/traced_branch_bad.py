@@ -1,0 +1,13 @@
+"""traced-branch positive fixture: Python control flow on traced values."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    y = jnp.sum(x)
+    if y > 0:
+        return y
+    while x:
+        break
+    return -y

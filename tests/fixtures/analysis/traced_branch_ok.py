@@ -1,0 +1,13 @@
+"""traced-branch negative fixture: static queries (`is None`, shape, ndim)
+stay branchable, and traced selects go through jnp.where — no findings."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x, cache=None):
+    if cache is not None and jnp.ndim(x) == 0:
+        x = x[None]
+    if x.shape[0] > 1:
+        x = x[:1]
+    return jnp.where(jnp.sum(x) > 0, x, -x)

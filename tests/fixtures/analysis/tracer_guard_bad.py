@@ -1,0 +1,13 @@
+"""tracer-guard positive fixture: two emits not dominated by an
+`.enabled` check."""
+
+
+class Engine:
+    def __init__(self, tracer):
+        self.tracer = tracer
+
+    def run(self, x):
+        self.tracer.begin("step")
+        if x:
+            self.tracer.mark("odd")
+        return x

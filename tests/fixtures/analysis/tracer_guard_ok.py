@@ -1,0 +1,20 @@
+"""tracer-guard negative fixture: guarded emits via the alias idiom, the
+early-exit spelling, and exempt non-emit methods — no findings."""
+
+
+class Engine:
+    def __init__(self, tracer):
+        self.tracer = tracer
+
+    def run(self, x):
+        tr = self.tracer
+        if tr.enabled:
+            tr.begin("step")
+        if not tr.enabled:
+            return x
+        tr.mark("ok")
+        tr.end("step")
+        return x
+
+    def flush(self, path):
+        self.tracer.save(path)

@@ -1,0 +1,176 @@
+"""Golden tests for the repro.analysis invariant linter.
+
+Each rule gets a positive fixture (the violation fires, with an exact
+count so new false positives are loud) and a negative fixture encoding
+the repo idioms the rule must NOT flag (constant-folded numpy tables,
+static shape queries, the tracer alias + early-exit guard spellings).
+Fixture snippets live in ``tests/fixtures/analysis/`` — excluded from
+pytest collection (pytest.ini norecursedirs) because they contain
+deliberate violations and fake project trees.
+"""
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.cli import main as cli_main
+from repro.analysis.engine import all_rules, analyze
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _tree(root, **files):
+    """Build a mini project: {dest relpath: fixture filename}."""
+    for dest, fixture in files.items():
+        out = root / dest
+        out.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(FIXTURES / fixture, out)
+    return root
+
+
+def _tree_from(root, fixture_dir):
+    shutil.copytree(FIXTURES / fixture_dir, root, dirs_exist_ok=True)
+    return root
+
+
+# (rule, positive fixture, expected findings, negative fixture)
+GOLDEN = [
+    ("jit-purity", "jit_purity_bad.py", 5, "jit_purity_ok.py"),
+    ("retrace-hazard", "retrace_hazard_bad.py", 3, "retrace_hazard_ok.py"),
+    ("traced-branch", "traced_branch_bad.py", 2, "traced_branch_ok.py"),
+    ("tracer-guard", "tracer_guard_bad.py", 2, "tracer_guard_ok.py"),
+]
+
+
+@pytest.mark.parametrize("rule,bad,count,_ok", GOLDEN,
+                         ids=[g[0] for g in GOLDEN])
+def test_rule_fires_on_positive_fixture(tmp_path, rule, bad, count, _ok):
+    _tree(tmp_path, **{f"src/{bad}": bad})
+    found = [f for f in analyze(tmp_path) if f.rule == rule]
+    assert len(found) == count, "\n".join(f.format() for f in found)
+    assert all(f.path == f"src/{bad}" and f.line > 0 for f in found)
+
+
+@pytest.mark.parametrize("rule,_bad,_count,ok", GOLDEN,
+                         ids=[g[0] for g in GOLDEN])
+def test_rule_quiet_on_negative_fixture(tmp_path, rule, _bad, _count, ok):
+    _tree(tmp_path, **{f"src/{ok}": ok})
+    found = analyze(tmp_path)
+    assert found == [], "\n".join(f.format() for f in found)
+
+
+def test_registry_completeness_positive(tmp_path):
+    _tree_from(tmp_path, "registry_bad")
+    found = [f for f in analyze(tmp_path)
+             if f.rule == "registry-completeness"]
+    msgs = "\n".join(f.format() for f in found)
+    assert len(found) == 4, msgs
+    assert "never register()-ed" in msgs          # Ghost defined, unused
+    assert "no KERNEL_CASES row" in msgs          # dense registered, unrowed
+    assert "stale conformance row" in msgs        # 'stale' rows a ghost
+    assert "does not define it" in msgs           # ref.missing_ref
+
+
+def test_registry_completeness_negative(tmp_path):
+    _tree_from(tmp_path, "registry_ok")
+    found = analyze(tmp_path)
+    assert found == [], "\n".join(f.format() for f in found)
+
+
+def test_schema_drift_positive(tmp_path):
+    _tree_from(tmp_path, "schema_bad")
+    found = [f for f in analyze(tmp_path) if f.rule == "schema-drift"]
+    msgs = "\n".join(f.format() for f in found)
+    assert len(found) == 2, msgs
+    assert "bare int literal" in msgs
+    assert "doc cites OBS_TRACE schema v2" in msgs
+
+
+def test_schema_drift_negative(tmp_path):
+    _tree_from(tmp_path, "schema_ok")
+    found = analyze(tmp_path)
+    assert found == [], "\n".join(f.format() for f in found)
+
+
+def test_line_suppression(tmp_path):
+    _tree(tmp_path, **{"src/suppressed.py": "suppressed.py"})
+    found = analyze(tmp_path)
+    assert [f.rule for f in found] == ["jit-purity"]
+    assert "print" in found[0].message    # the H.count store was ignored
+
+
+def test_file_suppression(tmp_path):
+    _tree(tmp_path, **{"src/suppressed_file.py": "suppressed_file.py"})
+    assert analyze(tmp_path) == []
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "broken.py").write_text("def f(:\n")
+    found = analyze(tmp_path)
+    assert [f.rule for f in found] == ["parse-error"]
+
+
+def test_baseline_round_trip(tmp_path):
+    root = _tree(tmp_path / "proj",
+                 **{"src/jit_purity_bad.py": "jit_purity_bad.py"})
+    findings = analyze(root)
+    assert findings
+    bl = tmp_path / "baseline.json"
+    baseline_mod.save(bl, findings)
+    keys = baseline_mod.load(bl)
+    new, old, expired = baseline_mod.split(findings, keys)
+    assert not new and not expired and len(old) == len(findings)
+    # everything fixed: every baseline entry expires (the file can only
+    # shrink honestly)
+    new, old, expired = baseline_mod.split([], keys)
+    assert not new and not old and len(expired) == len(set(keys))
+
+
+def test_cli_baseline_gate_and_update(tmp_path):
+    root = _tree(tmp_path,
+                 **{"src/jit_purity_bad.py": "jit_purity_bad.py"})
+    bl = str(tmp_path / "analysis-baseline.json")
+    args = ["--root", str(root), "--baseline", bl]
+    assert cli_main(args) == 1                       # new findings
+    assert cli_main(args + ["--update-baseline"]) == 0
+    assert cli_main(args) == 0                       # all baselined
+    (root / "src" / "jit_purity_bad.py").write_text("X = 1\n")
+    assert cli_main(args) == 1                       # expired entries
+    assert cli_main(args + ["--update-baseline"]) == 0
+    assert cli_main(args) == 0
+    assert baseline_mod.load(bl) == []
+
+
+def test_cli_json_report_schema(tmp_path, capsys):
+    root = _tree(tmp_path,
+                 **{"src/jit_purity_bad.py": "jit_purity_bad.py"})
+    rc = cli_main(["--root", str(root), "--json"])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert doc["report_version"] == 1
+    assert doc["ok"] is False
+    assert doc["counts"]["total"] == doc["counts"]["new"] \
+        == len(doc["findings"])
+    assert doc["counts"]["baselined"] == doc["counts"]["expired"] == 0
+    assert {f["rule"] for f in doc["findings"]} == {"jit-purity"}
+    assert all(set(f) == {"rule", "path", "line", "message", "baselined"}
+               for f in doc["findings"])
+    assert {r["name"] for r in doc["rules"]} \
+        == {r.name for r in all_rules()}
+
+
+def test_cli_rejects_unknown_rule(tmp_path, capsys):
+    assert cli_main(["--root", str(tmp_path), "--rule", "nope"]) == 2
+    assert "unknown rule" in capsys.readouterr().err
+
+
+def test_repo_tree_is_clean():
+    """The shipped baseline is empty: the live tree must stay finding-free
+    (fix or suppress in source, never park — docs/static-analysis.md)."""
+    findings = analyze(REPO_ROOT)
+    assert findings == [], "\n".join(f.format() for f in findings)
+    assert baseline_mod.load(REPO_ROOT / "analysis-baseline.json") == []

@@ -91,6 +91,24 @@ def test_registry_has_conformance_row():
         f"stale rows {set(KERNEL_CASES) - set(registry.names())}")
 
 
+def test_static_inventory_matches_imported_registry():
+    """The static-analysis inventory (what `python -m repro.analysis`
+    cross-checks in CI) must see the same kernel list the imported registry
+    exposes — a registration idiom the AST scan can't follow would
+    otherwise let the lint lane and this suite silently disagree."""
+    from pathlib import Path
+
+    from repro.analysis import inventory
+
+    repo_root = Path(__file__).resolve().parents[1]
+    assert set(inventory.registry_kernel_names(repo_root)) \
+        == set(registry.names()), (
+        "repro.analysis.inventory parsed a different kernel set than the "
+        "imported registry registers — update inventory's idiom handling")
+    rows = inventory.conformance_kernel_rows(repo_root)
+    assert set(rows) == set(KERNEL_CASES)
+
+
 def test_every_kernel_supported_by_conformance_fixture():
     """The fixture layer carries every encoding, so no kernel can silently
     skip the grid via its supports() gate."""
