@@ -139,11 +139,12 @@ def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False,
     alone and the percentile TTFT/TPOT columns come from the shared metrics
     layer.
 
-    ``workload="mixed"`` keeps the historical comparison: chunked vs
-    whole-prompt prefill, qat vs packed 2-bit weights, over the same mixed
-    prompt-length burst.  The chunked engine's defining property shows up in
-    ``max_step_tokens``: bounded by prefill_chunk + slots, where the
-    whole-prompt policy spikes to the longest prompt length.
+    ``workload="mixed"`` keeps the historical comparison: flat token-packed
+    vs chunked vs whole-prompt prefill, qat vs packed 2-bit weights, over
+    the same mixed prompt-length burst.  The flat/chunked engines' defining
+    property shows up in ``max_step_tokens``: bounded by
+    token_budget == prefill_chunk + slots, where the whole-prompt policy
+    spikes to the longest prompt length.
 
     ``workload="shared-prefix"`` measures prefix-caching KV reuse: the trace
     shares system prompts across groups, replayed with the cache off and on.
@@ -169,7 +170,7 @@ def run_serving(arch: str = "bitnet-2b-4t", quick: bool = False,
     trace = generator.generate(spec)
 
     rows = []
-    for policy in ("chunked", "whole"):
+    for policy in ("flat", "chunked", "whole"):
         for packed in ((False, True) if not quick else (True,)):
             block, eng, reqs = runner.run_workload(
                 spec, cfg, params, packed=packed, policy=policy, trace=trace)

@@ -123,12 +123,14 @@ def engine_counters(engine) -> dict:
         "whole_prefills": int(s["whole_prefills"]),
     }
     # Registry-only step accounting (no legacy stats key): planned is the
-    # padded B*C step width the jitted call multiplies, so
-    # realized/planned is the padding-waste signal the flat token-packing
-    # refactor will move.
+    # static step width the jitted call multiplies (flat: T; rectangular:
+    # the padded B*C), so realized/planned is the padding-waste signal the
+    # flat token layout moved.  ``rejections`` keeps goodput denominators
+    # honest: prompt-too-long requests are finished-ignored at admission
+    # and would otherwise be metric-invisible.
     reg = engine.metrics
     for k in ("planned_tokens", "realized_tokens", "prefill_steps",
-              "decode_steps", "admissions"):
+              "decode_steps", "admissions", "rejections"):
         out[k] = int(reg.get(k).value)
     if "prefix_hit_rate" in s:
         out["prefix_hit_rate"] = round(float(s["prefix_hit_rate"]), 6)

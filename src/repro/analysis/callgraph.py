@@ -9,8 +9,8 @@ call graph impossible; this one is deliberately conservative-by-name:
   jax.jit, ...)``; the function or lambda passed to a ``jax.jit(...)``
   call (including through a local name, e.g. ``step = make(...);
   jax.jit(step)`` marks ``make``'s nested defs); and any top-level
-  function named ``chunk_step`` (the serving step entry point, jitted by
-  the engine through a lambda);
+  function named ``chunk_step`` or ``flat_step`` (the serving step entry
+  points, jitted by the engine through lambdas);
 * **edges** — direct calls to names resolvable statically: same-module
   functions, ``from m import f`` symbols, ``mod.f`` through an imported
   module alias, ``self.m()`` methods of the enclosing class, and nested
@@ -35,7 +35,7 @@ from repro.analysis.engine import Project, SourceModule
 
 # Entry points that are jitted indirectly (the serving engine wraps them
 # in jax.jit lambdas; dryrun/train factories close over them).
-ROOT_FUNCTION_NAMES = ("chunk_step",)
+ROOT_FUNCTION_NAMES = ("chunk_step", "flat_step")
 
 _JIT_NAMES = {"jit"}          # from jax import jit
 _PARTIAL_NAMES = {"partial"}  # functools.partial / from functools import partial
@@ -233,8 +233,8 @@ class CallGraph:
                     target = self._resolve_call(arg, idx, None)
                     if target is not None:
                         self._add_factory_root(target)
-            # named entry points (chunk_step): jitted via engine lambdas
-            # whose closures keep cfg/train static — no param taint.
+            # named entry points (chunk_step/flat_step): jitted via engine
+            # lambdas whose closures keep cfg/train static — no param taint.
             for name in ROOT_FUNCTION_NAMES:
                 fi = idx.top_level(name)
                 if fi is not None:

@@ -254,6 +254,7 @@ def attention(
     causal: bool = True,
     cache: dict | None = None,       # {'k','v'} (B, S_max, Hkv, Dh) decode cache
     cache_len: jax.Array | None = None,  # valid prefix length (== pos of new tok)
+    slot: jax.Array | None = None,   # (T,) per-token slot index (flat layout)
     train: bool = True,
     return_kv: bool = False,
 ) -> tuple[jax.Array, dict | None]:
@@ -285,7 +286,48 @@ def attention(
     v = constrain(v, "attn_kv")
 
     new_cache = None
-    if cache is not None and jnp.ndim(cache_len) == 0:
+    if cache is not None and slot is not None:
+        # Flat token-packed decode (paged serving engine, ``flat`` policy):
+        # x is (1, T, D) — a ragged batch of T tokens from many slots packed
+        # along the sequence axis.  ``slot``/``pos`` are (T,) per-token
+        # coordinates into the (B, Vtok) cache view; padding rows carry the
+        # slot sentinel B.  Each token's K/V row is scattered to its own
+        # (slot, pos) cell; attention is segment-masked so a token sees
+        # exactly its own slot's causal prefix.
+        nb, vtok = cache["k"].shape[0], cache["k"].shape[1]
+        # Scatter by explicit flat index.  Padding rows are routed to a
+        # dump row appended past the live cells: JAX scatter DROPS
+        # out-of-bounds indices only in some modes and clamps in others, so
+        # the pad destination must be explicit, never "off the end".
+        widx = jnp.where(slot < nb, slot * vtok + pos, nb * vtok)
+
+        def flat_write(c, u):
+            flat = c.reshape((nb * vtok,) + c.shape[2:])
+            flat = jnp.concatenate([flat, jnp.zeros_like(flat[:1])], axis=0)
+            flat = flat.at[widx].set(u[0].astype(c.dtype))
+            return flat[:nb * vtok].reshape(c.shape)
+
+        ck = flat_write(cache["k"], k)
+        cv = flat_write(cache["v"], v)
+        new_cache = {"k": ck, "v": cv}
+        # Keys/values: the whole updated view flattened to one (B*Vtok,)
+        # key axis; the segment mask keeps cross-slot rows invisible.
+        k = ck.reshape((1, nb * vtok) + ck.shape[2:])
+        v = cv.reshape((1, nb * vtok) + cv.shape[2:])
+        t = nb * vtok
+        kidx = jnp.arange(t)
+        kslot = kidx // vtok
+        kpos = kidx % vtok
+        valid = (kslot[None, :] == slot[:, None]) \
+            & (kpos[None, :] <= pos[:, None])               # (T, B*Vtok)
+        if cfg.window_pattern:
+            in_win = kpos[None, :] > (pos[:, None] - cfg.window_size)
+            valid = valid & (jnp.asarray(is_global, bool) | in_win)
+        # Padding queries (slot == B) match no key: their softmax row is a
+        # uniform distribution over masked scores — finite garbage, never
+        # emitted (same contract as rectangular padding rows).
+        mask = valid[None, None, None, :, :]                # (1,1,1,T,B*Vtok)
+    elif cache is not None and jnp.ndim(cache_len) == 0:
         # Legacy synchronous decode: write new K/V at position cache_len
         # (shared by the whole batch), attend over the prefix.
         start = cache_len

@@ -62,6 +62,17 @@ def chunk_step(cfg, params, tokens, pos, cache, lengths, train=False, plan=None)
                                     train)
 
 
+def flat_step(cfg, params, tokens, slot, pos, cache, emit_row, train=False,
+              plan=None):
+    """Flat token-packed step (paged serving engine, ``flat`` policy):
+    tokens/slot/pos (T,) per-token triples — multiple concurrent prefill
+    chunks plus all decode tokens in one call — and emit_row (B,) selecting
+    each slot's logit row before the head.  See transformer.flat_step."""
+    with plan_runtime.activate(plan):
+        return _mod(cfg).flat_step(cfg, params, tokens, slot, pos, cache,
+                                   emit_row, train)
+
+
 # ---------------------------------------------------------------------------
 # Block-paged KV cache plumbing (serving engine)
 #

@@ -81,7 +81,8 @@ def global_flags(cfg) -> jnp.ndarray:
 # Blocks
 # ---------------------------------------------------------------------------
 
-def _block(cfg, p, x, *, flag, pos, train, mode, cache=None, cache_len=None):
+def _block(cfg, p, x, *, flag, pos, train, mode, cache=None, cache_len=None,
+           slot=None):
     """One layer.  mode: 'fwd' | 'prefill' | 'decode'.
 
     Returns (x, aux_loss, new_cache_or_None).
@@ -106,7 +107,7 @@ def _block(cfg, p, x, *, flag, pos, train, mode, cache=None, cache_len=None):
         attn_out, ac = layers.attention(
             cfg, p["attn"], h, pos=pos, is_global=flag,
             cache={"k": cache["k"], "v": cache["v"]}, cache_len=cache_len,
-            train=train,
+            slot=slot, train=train,
         )
         new_cache.update(ac)
     elif mode == "prefill":
@@ -277,6 +278,49 @@ def decode_step(cfg, params, tokens, cache: dict, t, train: bool = False):
 
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], flags, cache))
     return _head(cfg, params, x), new_cache
+
+
+def flat_step(cfg, params, tokens, slot, pos, cache: dict, emit_row,
+              train: bool = False):
+    """Flat token-packed step for the paged serving engine (``flat`` policy).
+
+    tokens (T,) int32 — ONE ragged batch of real tokens from many slots
+    packed along the sequence axis: several concurrent prefill chunks plus
+    every decode token, budgeted purely in tokens (no per-slot padding
+    rows);
+    slot (T,) int32 — per-token cache slot; padding rows carry the sentinel
+    ``B`` (== cache batch size) and are fully masked / scattered to a
+    scratch row;
+    pos (T,) int32 — per-token absolute position (== its KV write offset);
+    emit_row (B,) int32 — for each slot, the flat row whose logits it
+    samples (its last real token this step; engine masks non-emitting
+    slots).
+
+    Returns (logits (B, V) gathered at ``emit_row``, updated caches).  The
+    head runs on B rows, not T — emit-row selection happens before the
+    vocab matmul, so a wide prefill step never pays a (T, V) head.
+
+    Like ``chunk_step``, a slot's rows may start at a nonzero position
+    against a pre-populated cache (prefix-cache fork); attention masks by
+    absolute position within the slot's segment.
+    """
+    assert cfg.family not in ("ssm", "hybrid"), \
+        "SSM recurrence: flat layout needs KV-cache attention"
+    x = params["embed"][tokens][None, :, :] * math.sqrt(cfg.d_model)
+    x = x.astype(jnp.float32)
+    flags = global_flags(cfg)
+
+    def body(carry, xs):
+        xv = carry
+        p, flag, cache_l = xs
+        xv, _, nc = _block(cfg, p, xv, flag=flag, pos=pos, train=train,
+                           mode="decode", cache=cache_l, slot=slot)
+        return xv, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], flags, cache))
+    sel = x[0, emit_row]                       # (B, D) emitting rows only
+    logits = _head(cfg, params, sel[None])     # (1, B, V)
+    return logits[0], new_cache
 
 
 def chunk_step(cfg, params, tokens, pos, cache: dict, lengths, train: bool = False):

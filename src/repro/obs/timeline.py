@@ -223,6 +223,12 @@ def main(argv=None) -> int:
                     default=(), metavar="FEATURE",
                     help="exit 1 unless the trace contains these features "
                          f"(choices: {', '.join(sorted(_REQUIRE_CHECKS))})")
+    ap.add_argument("--min-step-utilization", type=float, default=None,
+                    metavar="FRACTION",
+                    help="exit 1 unless step-budget utilization "
+                         "(realized/planned over all steps) is >= FRACTION "
+                         "— the CI gate keeping the flat token layout's "
+                         "padding-waste win from regressing")
     args = ap.parse_args(argv)
 
     doc = _trace.load(args.trace)
@@ -238,6 +244,12 @@ def main(argv=None) -> int:
         print(f"MISSING required trace features: {', '.join(missing)}",
               file=sys.stderr)
         return 1
+    if args.min_step_utilization is not None:
+        util = summary["steps"]["budget_utilization"]
+        if util is None or util < args.min_step_utilization:
+            print(f"step-budget utilization {util} below required "
+                  f"{args.min_step_utilization}", file=sys.stderr)
+            return 1
     return 0
 
 

@@ -23,11 +23,15 @@ The module splits four ways:
   gather -> model -> scatter step, sampling, prefix registration, and
   latency stats (per-request TTFT/TPOT).
 
-Policies: ``chunked`` (default for dense/MoE attention families) interleaves
-prefill chunks with decode; ``whole`` prefills each admitted prompt in a
-single per-slot call (required for SSM/hybrid recurrences, enc-dec and VLM
-frontends, and useful as the equivalence reference in tests).  Both run the
-same per-slot-position decode math, so their greedy outputs are identical.
+Policies: ``flat`` (default for dense/MoE attention families) packs every
+step into one flat ``(T,)`` token vector — multiple concurrent prefill
+chunks plus all decode tokens, budgeted purely in tokens
+(``token_budget``), so the jitted matmuls multiply almost no padding;
+``chunked`` is the rectangular ``(B, C)`` predecessor (one prefill chunk
+per step, kept as the equivalence reference); ``whole`` prefills each
+admitted prompt in a single per-slot call (required for SSM/hybrid
+recurrences, enc-dec and VLM frontends).  All three run the same
+per-slot-position decode math, so their greedy outputs are identical.
 
 Weight modes:
 * ``qat``    — latent fp weights, exact-int8 eval math.
@@ -287,6 +291,14 @@ def _chunk_call(cfg, params, pools, table, tokens, pos, lengths, emit_idx):
     return sel, pools
 
 
+def _flat_call(cfg, params, pools, table, tokens, slot, pos, emit_row):
+    view = model_zoo.gather_cache_view(pools, table)
+    sel, view = model_zoo.flat_step(cfg, params, tokens, slot, pos, view,
+                                    emit_row, train=False)
+    pools = model_zoo.scatter_cache_view(pools, table, view)
+    return sel, pools
+
+
 def _whole_prefill_call(cfg, params, pools, table, batch, slot):
     view = model_zoo.gather_cache_view(pools, table)
     slot_view = jax.tree.map(
@@ -308,6 +320,7 @@ class ServingEngine:
                  packed: bool = False, cache_dtype=jnp.float32, seed: int = 0,
                  prefill_chunk: int = 16, block_size: int = 16,
                  kv_blocks: int | None = None, policy: str | None = None,
+                 token_budget: int | None = None,
                  profile_density: bool = True,
                  plan: ModelPlan | None = None,
                  sparse: str | bool = "auto",
@@ -323,15 +336,28 @@ class ServingEngine:
         self.key = jax.random.PRNGKey(seed)
         self.prefill_chunk = prefill_chunk
         if policy is None:
-            policy = "chunked" if cfg.family in _CHUNKABLE_FAMILIES else "whole"
-        elif policy == "chunked" and cfg.family not in _CHUNKABLE_FAMILIES:
+            policy = "flat" if cfg.family in _CHUNKABLE_FAMILIES else "whole"
+        elif (policy in ("flat", "chunked")
+              and cfg.family not in _CHUNKABLE_FAMILIES):
             # SSM recurrences / frontend prefills need the whole-prompt path;
             # refusing (rather than silently downgrading) keeps benchmark
             # labels honest.
             raise ValueError(
-                f"policy='chunked' is unsupported for family {cfg.family!r}; "
+                f"policy={policy!r} is unsupported for family {cfg.family!r}; "
                 "pass policy=None (auto) or 'whole'")
         self.policy = policy
+        # TTFT-vs-TPOT knob for the flat policy: the static per-step token
+        # budget T.  The default matches the rectangular bound
+        # (prefill_chunk + slots), so flat serves the same worst-case real
+        # work per step with almost none of the padding.
+        if token_budget is None:
+            token_budget = prefill_chunk + batch_slots
+        if token_budget < batch_slots + 1:
+            raise ValueError(
+                f"token_budget={token_budget} < batch_slots + 1 "
+                f"({batch_slots + 1}): every decode slot needs a row plus "
+                "at least one prefill token")
+        self.token_budget = token_budget
         self._extra = cfg.frontend_seq if cfg.family == "vlm" else 0
 
         self.kv = PagedKVCache(cfg, batch_slots, max_len, block_size=block_size,
@@ -339,14 +365,14 @@ class ServingEngine:
         self.sched = ChunkedScheduler(prefill_chunk=prefill_chunk)
         # Prefix-caching KV reuse (``serving.prefix_cache``): ``True`` turns
         # it on, an int additionally caps the cached-block footprint (LRU
-        # evicted above it).  Reuse requires the chunked path (a prefill must
-        # be able to START at the fork boundary); for whole-prefill families
+        # evicted above it).  Reuse requires a chunk-capable path (a prefill
+        # must be able to START at the fork boundary); for whole-prefill families
         # — SSM/hybrid recurrences carry non-block state, enc-dec/VLM
         # frontends carry non-token positions — hits cannot apply, so the
         # config degrades gracefully to a disabled cache whose telemetry
         # reports a 0.0 hit rate instead of refusing to serve.
         self.prefix: PrefixCache | None = None
-        if prefix_cache and self.policy == "chunked":
+        if prefix_cache and self.policy in ("flat", "chunked"):
             cap = (prefix_cache
                    if isinstance(prefix_cache, int)
                    and not isinstance(prefix_cache, bool) else None)
@@ -387,9 +413,13 @@ class ServingEngine:
             "preemptions", "recompute-style slot preemptions")
         self._c_admissions = reg.counter(
             "admissions", "slot admissions (including re-admissions)")
+        self._c_rejections = reg.counter(
+            "rejections",
+            "requests rejected at admission (prompt can never fit)")
         self._c_planned = reg.counter(
             "planned_tokens",
-            "padded B*C step-width rows the jitted call multiplies")
+            "step-width rows the jitted call multiplies (flat: T; "
+            "rectangular: padded B*C)")
         self._c_realized = reg.counter(
             "realized_tokens", "real (non-padding) tokens across steps")
         self._c_prefill_steps = reg.counter(
@@ -430,6 +460,10 @@ class ServingEngine:
             "peak_kv_blocks": _peak(self._g_kv),
             "max_step_tokens": _peak(self._g_step_tokens),
         })
+        # Bound AFTER the base view: the first ten legacy keys keep their
+        # pinned order (tests assert it) while rejections still write
+        # through to the registry like every other stat.
+        self.stats.bind("rejections", *_cv(self._c_rejections))
         if prefix_cache:
             # Keys (and their registry metrics) exist whenever the cache was
             # REQUESTED (including the whole-policy degrade, where they stay
@@ -470,7 +504,9 @@ class ServingEngine:
         if plan is None and packed:
             plan = compile_plan(self.params, BatchProfile(
                 decode_ns=(1, batch_slots),
-                prefill_ns=(prefill_chunk, batch_slots * (prefill_chunk + 1))))
+                prefill_ns=(prefill_chunk,
+                            batch_slots * (prefill_chunk + 1),
+                            token_budget)))
         self.plan = plan
         if self.plan is not None:
             self.stats["plan_layers"] = len(self.plan.layers)
@@ -506,6 +542,10 @@ class ServingEngine:
             lambda p, pools, tbl, tk, ps, ln, ei:
             _chunk_call(cfg, p, pools, tbl, tk, ps, ln, ei),
             donate_argnums=(1,))
+        flat_jit = jax.jit(
+            lambda p, pools, tbl, tk, sl, ps, er:
+            _flat_call(cfg, p, pools, tbl, tk, sl, ps, er),
+            donate_argnums=(1,))
         prefill_jit = jax.jit(
             lambda p, pools, tbl, b, i:
             _whole_prefill_call(cfg, p, pools, tbl, b, i),
@@ -518,6 +558,7 @@ class ServingEngine:
             return call
 
         self._chunk_fn = _planned(chunk_jit)
+        self._flat_fn = _planned(flat_jit)
         self._prefill_fn = _planned(prefill_jit)
 
     # -- request management --------------------------------------------------
@@ -534,10 +575,16 @@ class ServingEngine:
         self._queue.append(req)
 
     def _admit(self):
+        rej0 = self.sched.rejections
         admitted = self.sched.admit(self._slots, self._queue, self.kv,
                                     extra_positions=self._extra,
                                     reserve_full=self.policy == "whole",
                                     prefix_cache=self.prefix)
+        if self.sched.rejections > rej0:
+            # Mirror scheduler rejections (prompt-too-long, finished-ignored
+            # at admission) into the registry so goodput denominators and
+            # ``stats["rejections"]`` stay honest.
+            self._c_rejections.inc(self.sched.rejections - rej0)
         tr = self.tracer
         for i, st in admitted:
             self._c_admissions.inc()
@@ -665,28 +712,43 @@ class ServingEngine:
         """One engine step: admit, then one mixed prefill-chunk/decode call.
         Returns False when there was nothing to do."""
         self._admit()
-        plan = self.sched.plan(self._slots, self.kv)
+        flat = self.policy == "flat"
+
+        def _plan():
+            if flat:
+                return self.sched.plan_flat(self._slots, self.kv,
+                                            self.token_budget)
+            return self.sched.plan(self._slots, self.kv)
+
+        plan = _plan()
         while isinstance(plan, Preempt):
             self._preempt(plan.slot)
-            plan = self.sched.plan(self._slots, self.kv)
+            plan = _plan()
         if plan is None:
             return False
 
         table = self.kv.table_view(plan.view_blocks)
         step_no = self._c_steps.value
-        # planned = the padded B*C step width: the rows the jitted matmuls
-        # actually multiply.  realized/planned is the step-budget utilization
-        # the timeline CLI reports; 1 - it is exactly the padding waste the
-        # ROADMAP's flat token-packing item targets.
-        planned = self.slots * plan.chunk
+        # planned = the static step width: the rows the jitted matmuls
+        # actually multiply (flat: T; rectangular: the padded B*C).
+        # realized/planned is the step-budget utilization the timeline CLI
+        # reports; 1 - it is exactly the padding waste the flat layout
+        # removes.
+        planned = plan.width if flat else self.slots * plan.chunk
         ann = (obs_trace.step_annotation(step_no) if self._profile_steps
                else contextlib.nullcontext())
         t0 = time.perf_counter()
         with ann:
-            sel, self.kv.pools = self._chunk_fn(
-                self.params, self.kv.pools, table,
-                jnp.asarray(plan.tokens), jnp.asarray(plan.pos),
-                jnp.asarray(plan.lengths), jnp.asarray(plan.emit_idx))
+            if flat:
+                sel, self.kv.pools = self._flat_fn(
+                    self.params, self.kv.pools, table,
+                    jnp.asarray(plan.tokens), jnp.asarray(plan.slot),
+                    jnp.asarray(plan.pos), jnp.asarray(plan.emit_row))
+            else:
+                sel, self.kv.pools = self._chunk_fn(
+                    self.params, self.kv.pools, table,
+                    jnp.asarray(plan.tokens), jnp.asarray(plan.pos),
+                    jnp.asarray(plan.lengths), jnp.asarray(plan.emit_idx))
             sel.block_until_ready()
         dt = time.perf_counter() - t0
 
@@ -726,19 +788,25 @@ class ServingEngine:
             if st is None or plan.n_real[i] == 0:
                 continue
             self.kv.lengths[i] += int(plan.n_real[i])
-            if i == plan.prefill_slot:
+            advanced = plan.advances_prefill(i)
+            if advanced:
                 if tr.enabled:
                     tr.mark(st.req.uid, "prefill_chunk",
                             n=int(plan.n_real[i]), start=st.cursor)
                 st.cursor += int(plan.n_real[i])
-                if not st.prefilling:
-                    # Prompt fully in cache: register its full blocks NOW so
-                    # requests sharing this prefix hit it while this one is
-                    # still decoding (system-prompt sharing, the dominant
-                    # multi-tenant pattern).
-                    self._register_prefix(i, st)
             if plan.emit[i]:
                 self._emit_token(i, st, int(toks[i]))
+            if advanced and not st.prefilling and self._slots[i] is not None:
+                # Prompt fully in cache and the request is still live:
+                # register its full blocks NOW so requests sharing this
+                # prefix hit it while this one is still decoding
+                # (system-prompt sharing, the dominant multi-tenant
+                # pattern).  Checked AFTER the emit: a request finishing on
+                # its first sampled token was already registered by
+                # ``_emit_token`` — registering here too would walk the tree
+                # twice for the same content (satellite fix, pinned in
+                # tests/test_prefix_cache.py).
+                self._register_prefix(i, st)
         self._sync_prefix_stats()
         return True
 
@@ -834,6 +902,7 @@ class ServingEngine:
         self.sched.prefill_tokens_planned = 0
         self.sched.cached_tokens_skipped = 0
         self.sched.readmissions = 0
+        self.sched.rejections = 0
         # Refresh gauge values to post-reset reality FIRST, then let the
         # registry reset counters/histograms and rebase every gauge peak to
         # its current value.

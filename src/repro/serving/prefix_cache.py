@@ -96,6 +96,11 @@ class PrefixCache:
         self.hit_tokens = 0       # prompt tokens served from cache
         self.miss_tokens = 0      # prompt tokens that had to be prefilled
         self.evictions = 0
+        # insert() CALLS (not blocks added): the engine registers each
+        # request's content exactly once per lifecycle event — the
+        # double-registration regression (prefill-end + finish in the same
+        # step) is pinned against this in tests/test_prefix_cache.py.
+        self.inserts = 0
         self.tracer = NULL_TRACER   # set by ServingEngine
         kv.evictor = self
 
@@ -164,6 +169,7 @@ class PrefixCache:
         sound and the loser's blocks simply stay exclusive to its slot.
         Returns the number of newly cached blocks."""
         bs = self.block_size
+        self.inserts += 1
         n_full = len(tokens) // bs
         node, added = self.root, 0
         self._tick += 1

@@ -1,18 +1,34 @@
-"""Admission + chunked-prefill step planning (Sarathi-style stall-free
+"""Admission + token-budgeted step planning (Sarathi-style stall-free
 batching).
 
-Every engine step is ONE static-shape batched model call of width C:
+Two planners share the admission/preemption machinery:
 
-* each *decoding* slot contributes its single last-sampled token,
-* at most ONE *prefilling* slot advances by up to ``prefill_chunk`` prompt
-  tokens (round-robin by admission order),
-* empty slots ride along as padding (their writes land in the scratch block
-  and are never attended).
+``plan_flat`` (the default ``flat`` engine policy) packs every step into ONE
+flat ``(T,)`` token vector with per-token slot/position indices, budgeted
+purely in tokens (``T = token_budget``, static):
 
-So a long prompt can never stall the decode loop for more than one step, and
-per-step real work is bounded by ``prefill_chunk + slots`` tokens (the
-acceptance bound).  When no slot is prefilling the step width collapses to
-C == 1 — a pure decode step, exactly as cheap as the classic decode loop.
+* each *decoding* slot contributes its single last-sampled token first
+  (decode is never starved — the TPOT side of the knob),
+* the REMAINING budget is fair-shared across ALL concurrent prefilling
+  slots — each live prefiller gets ``max(1, budget_left // n_live)`` tokens
+  per round, oldest admission first, until the budget or the prompts run
+  out (the TTFT side: no prefiller waits for an earlier one to finish),
+* leftover rows are padding (slot sentinel ``B``; their KV writes are
+  routed to a scratch row and never attended).
+
+``token_budget`` is therefore the TTFT-vs-TPOT knob: a larger budget lands
+more prefill tokens per step (lower TTFT) at the cost of a wider — slower —
+step for the decoders riding along (higher TPOT).  When no slot is
+prefilling the width collapses to ``T == slots``, a pure decode step.
+
+``plan`` (the legacy ``chunked`` policy, kept as the equivalence reference)
+is the rectangular ``(B, C)`` layout: each decoding slot contributes one
+token, and at most ONE prefilling slot — strict FIFO by admission order,
+served until its prompt is done — advances by up to ``prefill_chunk``
+tokens; other prefillers wait as padding rows.  Per-step real work is
+bounded by ``prefill_chunk + slots`` tokens, but every idle row is padding
+the jitted matmuls multiply for nothing — the padding waste the flat
+layout removes.
 
 The planner also reserves KV blocks with the :class:`PagedKVCache` allocator;
 if the pool cannot cover this step's growth it returns a :class:`Preempt`
@@ -31,6 +47,7 @@ accounted in both the admission block budget and the step token budget.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -73,6 +90,39 @@ class StepPlan:
     def real_tokens(self) -> int:
         return int(self.n_real.sum())
 
+    def advances_prefill(self, i: int) -> bool:
+        """Did slot ``i`` land prefill tokens this step?"""
+        return i == self.prefill_slot
+
+
+@dataclass
+class FlatStepPlan:
+    """One flat token-packed step: ``width`` rows, each a (token, slot, pos)
+    triple.  Rows are grouped per slot in ascending slot order, positions
+    ascending within a slot; padding rows carry the slot sentinel ``B``
+    (their KV writes are routed to a scratch row and they are fully masked
+    in attention)."""
+    tokens: np.ndarray                # (T,) int32
+    slot: np.ndarray                  # (T,) int32; padding rows == n_slots
+    pos: np.ndarray                   # (T,) int32 absolute positions
+    lengths: np.ndarray               # (B,) int32 pre-step write offsets
+    n_real: np.ndarray                # (B,) real tokens landed per slot
+    emit: np.ndarray                  # (B,) bool — slot samples a token
+    emit_row: np.ndarray              # (B,) flat row of the emitting logit
+    width: int                        # T, static step width (== planned)
+    view_blocks: int                  # block-table view width for this step
+    prefill_mask: np.ndarray = None   # (B,) bool — slot landed prefill tokens
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+    @property
+    def real_tokens(self) -> int:
+        return int(self.n_real.sum())
+
+    def advances_prefill(self, i: int) -> bool:
+        """Did slot ``i`` land prefill tokens this step?"""
+        return bool(self.prefill_mask[i])
+
 
 @dataclass
 class Preempt:
@@ -94,6 +144,10 @@ class ChunkedScheduler:
     # the workload harness reports this alongside ``preemptions`` so a
     # preemption storm's recompute churn is visible per run.
     readmissions: int = field(default=0, init=False)
+    # Prompt-too-long rejections (finished-ignored at admission).  Counted
+    # here — not just trace-marked — so goodput denominators stay honest:
+    # the engine mirrors this into its metrics registry and ``stats``.
+    rejections: int = field(default=0, init=False)
     # Event tracer (repro.obs.trace); the owning engine swaps in its own.
     # Admission events are emitted HERE because only the scheduler sees the
     # decision and its inputs (slot, cached fork length, rejections).
@@ -138,6 +192,8 @@ class ChunkedScheduler:
                         # Retry this slot with the next queued request.
                         queue.pop(0)
                         req.done = True
+                        req.t_done = time.perf_counter()
+                        self.rejections += 1
                         if self.tracer.enabled:
                             self.tracer.end(req.uid, "queued")
                             self.tracer.mark(req.uid, "cancelled",
@@ -237,6 +293,92 @@ class ChunkedScheduler:
                         view_blocks=kv.view_blocks(needed),
                         prefill_slot=pf, prefill_tokens=n_prefill,
                         decode_tokens=n_decode)
+
+    def plan_flat(self, slots: list, kv,
+                  token_budget: int) -> FlatStepPlan | Preempt | None:
+        """Token-budget fair-share planning into a flat ``(T,)`` layout.
+
+        Decode slots are served first (one token each, never starved); the
+        remaining budget is split across ALL concurrent prefillers in
+        fair-share rounds (``max(1, left // n_live)`` each, oldest admission
+        first) until the budget or the prompts run out.  Waiting prefillers
+        simply contribute zero rows — the flat layout has no per-slot
+        padding.  Invariant (property-tested): ``sum(n_real) ==
+        min(token_budget, available tokens)`` and each slot's rows appear in
+        ascending position order."""
+        b = len(slots)
+        active = [i for i in range(b) if slots[i] is not None]
+        if not active:
+            return None
+
+        decoders = [i for i in active if not slots[i].prefilling]
+        prefillers = sorted((i for i in active if slots[i].prefilling),
+                            key=lambda i: slots[i].admitted_at)
+
+        take = dict.fromkeys(active, 0)
+        for i in decoders:
+            take[i] = 1
+        left = token_budget - len(decoders)
+        need = {i: len(slots[i].prompt) - slots[i].cursor for i in prefillers}
+        live = [i for i in prefillers if need[i] > 0]
+        while left > 0 and live:
+            share = max(1, left // len(live))
+            for i in list(live):
+                c = min(share, need[i], left)
+                take[i] += c
+                need[i] -= c
+                left -= c
+                if need[i] == 0:
+                    live.remove(i)
+                if left == 0:
+                    break
+
+        n_prefill = sum(take[i] for i in prefillers)
+        # Pure-decode steps collapse to T == slots (the cheap second trace);
+        # any prefill work runs at the full static budget width.
+        width = token_budget if n_prefill else b
+
+        tokens = np.zeros(width, np.int32)
+        slot = np.full(width, b, np.int32)        # sentinel: padding row
+        pos = np.zeros(width, np.int32)
+        lengths = np.zeros(b, np.int32)
+        n_real = np.zeros(b, np.int32)
+        emit = np.zeros(b, bool)
+        emit_row = np.zeros(b, np.int32)
+        prefill_mask = np.zeros(b, bool)
+
+        row = 0
+        for i in active:
+            st = slots[i]
+            ln = int(kv.lengths[i])
+            lengths[i] = ln
+            c = take[i]
+            if c == 0:
+                continue                          # prefiller waiting its turn
+            if not kv.ensure(i, ln + c):
+                return Preempt(self._victim(slots, active))
+            if st.prefilling:
+                tokens[row:row + c] = st.prompt[st.cursor:st.cursor + c]
+                emit[i] = st.cursor + c == len(st.prompt)  # prompt done: TTFT
+                prefill_mask[i] = True
+            else:
+                tokens[row] = st.last_tok
+                emit[i] = True
+            slot[row:row + c] = i
+            pos[row:row + c] = ln + np.arange(c)
+            n_real[i] = c
+            emit_row[i] = row + c - 1
+            row += c
+
+        needed = max(int(kv.lengths[i]) + take[i] for i in active)
+        self.prefill_tokens_planned += n_prefill
+        return FlatStepPlan(tokens=tokens, slot=slot, pos=pos,
+                            lengths=lengths, n_real=n_real, emit=emit,
+                            emit_row=emit_row, width=width,
+                            view_blocks=kv.view_blocks(needed),
+                            prefill_mask=prefill_mask,
+                            prefill_tokens=n_prefill,
+                            decode_tokens=len(decoders))
 
     @staticmethod
     def _victim(slots: list, active: list[int]) -> int:

@@ -62,6 +62,19 @@ def test_rule_quiet_on_negative_fixture(tmp_path, rule, _bad, _count, ok):
     assert found == [], "\n".join(f.format() for f in found)
 
 
+def test_flat_step_is_name_seeded_root(tmp_path):
+    """``flat_step`` joins ``chunk_step`` as a name-seeded jit root: the
+    flat serving entry point is jitted through an engine lambda (an
+    attribute-on-call-result the resolver can't follow), so jit-purity
+    reachability must come from ROOT_FUNCTION_NAMES — this pins that the
+    flat refactor did not shrink what the lint lane covers."""
+    _tree(tmp_path, **{"src/flat_step_root_bad.py": "flat_step_root_bad.py"})
+    found = [f for f in analyze(tmp_path) if f.rule == "jit-purity"]
+    assert len(found) == 1, "\n".join(f.format() for f in found)
+    assert found[0].path == "src/flat_step_root_bad.py"
+    assert "print" in found[0].message
+
+
 def test_registry_completeness_positive(tmp_path):
     _tree_from(tmp_path, "registry_bad")
     found = [f for f in analyze(tmp_path)

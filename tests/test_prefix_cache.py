@@ -325,6 +325,29 @@ class TestEnginePrefixReuse:
         assert eng.stats["prefix_evictions"] > 0
         eng.prefix.check()
 
+    @pytest.mark.parametrize("policy", ["flat", "chunked"])
+    def test_finish_at_prefill_end_registers_once(self, model, policy):
+        """Satellite regression: a request whose final prefill chunk also
+        emits its last token (max_new_tokens=1) used to be registered with
+        the prefix cache TWICE in one step — once at prefill end, once at
+        finish.  ``PrefixCache.inserts`` counts insert() calls, pinning
+        single registration per lifecycle event."""
+        cfg, params = model
+        eng = ServingEngine(cfg, params, max_len=64, batch_slots=2,
+                            prefill_chunk=8, policy=policy,
+                            prefix_cache=True)
+        eng.run([Request(uid=0, prompt=np.arange(24, dtype=np.int32),
+                         max_new_tokens=1)])
+        assert eng.prefix.inserts == 1
+        # A request that keeps decoding registers once at prefill end and
+        # once at finish — two lifecycle events, two inserts.
+        eng2 = ServingEngine(cfg, params, max_len=64, batch_slots=2,
+                             prefill_chunk=8, policy=policy,
+                             prefix_cache=True)
+        eng2.run([Request(uid=0, prompt=np.arange(24, dtype=np.int32),
+                          max_new_tokens=4)])
+        assert eng2.prefix.inserts == 2
+
     def test_ssm_family_degrades_to_cold(self):
         """Satellite: state-carrying families accept prefix_cache=True but
         degrade gracefully — whole-prefill policy, zero hit rate, identical
