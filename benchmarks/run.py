@@ -41,7 +41,13 @@ def main() -> None:
                     help="serving suite: save the shared-prefix warm "
                          "replay's observability trace (Perfetto "
                          "trace_event JSON; analyze with "
-                         "python -m repro.obs.timeline PATH)")
+                         "python -m repro.obs.timeline PATH) — a JSONL "
+                         "stream of the same run goes to PATH's .jsonl "
+                         "sibling with fingerprint identity asserted")
+    ap.add_argument("--incident-dir", default=None, metavar="DIR",
+                    help="serving suite: arm per-workload incident "
+                         "snapshots (SLO breach/preemption/rejection/"
+                         "kv-pressure/eviction-storm) into DIR")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -79,7 +85,8 @@ def main() -> None:
             + bench_e2e.run_serving(quick=args.quick,
                                     workload="shared-prefix"))
         report = runner.run_suite(quick=args.quick, seed=args.seed,
-                                  trace_out=args.trace_out)
+                                  trace_out=args.trace_out,
+                                  incident_dir=args.incident_dir)
         schema.save(report, args.out)
         print(f"# serving report: {args.out} "
               f"({len(report['workloads'])} workloads, seed {args.seed})",

@@ -38,11 +38,14 @@ DEFAULT_ARCH = "bitnet-2b-4t"
 
 
 def build_engine(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
-                 policy: str | None = None, prefix_cache=None, tracer=None):
+                 policy: str | None = None, prefix_cache=None, tracer=None,
+                 incidents=None):
     """Construct a ServingEngine from a workload spec's engine hints.
     ``prefix_cache`` overrides the spec hint (the cache-off control
     replay); ``tracer`` attaches an ``repro.obs.trace.EventTracer`` so the
-    replay records its lifecycle/step events."""
+    replay records its lifecycle/step events; ``incidents`` attaches an
+    ``repro.obs.incident.IncidentMonitor`` (bound to the engine's registry
+    and tracer by the engine itself)."""
     from repro.serving import ServingEngine
 
     e = spec.engine
@@ -58,7 +61,8 @@ def build_engine(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
         kv_blocks=e.get("kv_blocks"),
         policy=policy,
         prefix_cache=prefix_cache,
-        tracer=tracer)
+        tracer=tracer,
+        incidents=incidents)
 
 
 def replay(engine, trace: Trace, *, step_dt: float = 1.0,
@@ -110,12 +114,13 @@ def replay(engine, trace: Trace, *, step_dt: float = 1.0,
 def run_workload(spec: WorkloadSpec, cfg, params, *, packed: bool = True,
                  policy: str | None = None, prefix_cache=None,
                  warmup: bool = True, trace: Trace | None = None,
-                 tracer=None, slo_scale: float = 1.0):
+                 tracer=None, slo_scale: float = 1.0, incidents=None):
     """Generate (or take) the trace, replay it, and return
     ``(report_block, engine, requests)``."""
     trace = generate(spec) if trace is None else trace
     engine = build_engine(spec, cfg, params, packed=packed, policy=policy,
-                          prefix_cache=prefix_cache, tracer=tracer)
+                          prefix_cache=prefix_cache, tracer=tracer,
+                          incidents=incidents)
     reqs, wall = replay(engine, trace, warmup=warmup)
     block = {
         "spec": spec.to_dict(),
@@ -175,24 +180,41 @@ SUITE = ("steady", "bursty", "shared-prefix", "decode-heavy",
          "preemption-storm", "eviction-pressure")
 
 
+def _stream_path(trace_out: str) -> str:
+    """The JSONL stream path derived from a --trace-out document path."""
+    return (trace_out[:-5] if trace_out.endswith(".json") else trace_out) \
+        + ".jsonl"
+
+
 def run_suite(*, quick: bool = False, seed: int = 0,
               arch: str = DEFAULT_ARCH, names=SUITE,
               trace_out: str | None = None,
-              calibrate_slo: bool = True) -> dict:
+              calibrate_slo: bool = True,
+              incident_dir: str | None = None) -> dict:
     """Run the workload suite and return the schema-valid report document.
 
-    ``trace_out`` saves the shared-prefix warm replay's observability trace
-    (Perfetto ``trace_event`` JSON, see ``repro.obs.trace``) to that path
-    and attaches its provenance to the report block — the trace's structure
-    fingerprint lives OUTSIDE the counters section, so tracing can never
-    perturb the exact-gated numbers.  ``calibrate_slo`` measures this host's
+    ``trace_out`` records the shared-prefix warm replay's observability
+    trace BOTH ways at once (a ``TeeSink`` over a ``MemorySink`` and a
+    ``StreamingSink``): the Perfetto document goes to ``trace_out``, the
+    JSONL stream to the same path with ``.jsonl``, and the suite asserts
+    the two produce identical structure fingerprints and identical
+    ``timeline`` analyses — the disk-streamed path can never silently
+    diverge from the in-memory one.  Provenance attaches to the report
+    block OUTSIDE the counters section, so tracing can never perturb the
+    exact-gated numbers.  ``incident_dir`` arms a per-workload
+    ``IncidentMonitor`` (ring-buffer flight recorder attached when no
+    tracer is, SLO thresholds from the spec scaled by the calibration) and
+    records what fired per block.  ``calibrate_slo`` measures this host's
     reference decode-step latency first and scales every preset SLO
     threshold by it (recorded in the report provenance)."""
     import jax
 
     import repro.configs as configs
     from repro.models import model_zoo as zoo
-    from repro.obs.trace import EventTracer
+    from repro.obs import timeline
+    from repro.obs.incident import IncidentMonitor
+    from repro.obs.trace import EventTracer, MemorySink, RingSink, \
+        StreamingSink, TeeSink
 
     cfg = configs.get(arch).reduced()
     params = zoo.init_params(cfg, jax.random.PRNGKey(0))
@@ -209,24 +231,68 @@ def run_suite(*, quick: bool = False, seed: int = 0,
         trace = generate(spec)
         print(f"#   workload {name}: {trace.n_requests} requests, "
               f"{trace.total_prompt_tokens()} prompt tokens", file=sys.stderr)
-        tracer = (EventTracer()
-                  if trace_out and name == "shared-prefix" else None)
+        stream = None
+        tracer = None
+        if trace_out and name == "shared-prefix":
+            stream = StreamingSink(_stream_path(trace_out))
+            tracer = EventTracer(sink=TeeSink(MemorySink(), stream))
+        monitor = None
+        if incident_dir:
+            slo = spec.slo or {}
+            monitor = IncidentMonitor(
+                incident_dir, prefix=name,
+                slo_ttft_s=(slo["ttft_s"] * slo_scale
+                            if slo.get("ttft_s") else None),
+                slo_tpot_s=(slo["tpot_s"] * slo_scale
+                            if slo.get("tpot_s") else None))
+            if tracer is None:
+                # Flight recorder so incident dumps carry recent events.
+                # Attaching a tracer cannot perturb the exact-gated
+                # counters (traced-vs-untraced bit-identity, tested).
+                tracer = EventTracer(sink=RingSink())
         block, engine, reqs = run_workload(spec, cfg, params, trace=trace,
-                                           tracer=tracer, slo_scale=slo_scale)
+                                           tracer=tracer, slo_scale=slo_scale,
+                                           incidents=monitor)
         blocks[name] = block
         _emit_csv(name, block)
-        if tracer is not None:
+        if stream is not None:
             doc = tracer.save(trace_out)
+            info = stream.finalize()
+            # The tentpole contract: the disk-streamed trace fingerprints
+            # byte-for-byte identically to the in-memory export, and the
+            # timeline analysis of the JSONL round-trip matches exactly.
+            assert info["fingerprint"] == doc["otherData"]["fingerprint"], (
+                f"StreamingSink fingerprint {info['fingerprint']} != "
+                f"MemorySink fingerprint {doc['otherData']['fingerprint']}")
+            mem_a = timeline.analyze(doc)
+            st_a = timeline.analyze_stream(info["path"])
+            st_a.pop("stream")
+            assert mem_a == st_a, (
+                "timeline analysis of the JSONL stream diverged from the "
+                "in-memory document")
             block["obs_trace"] = {
                 "path": trace_out,
                 "fingerprint": doc["otherData"]["fingerprint"],
                 "schema_version": doc["otherData"]["schema_version"],
                 "n_events": len(doc["traceEvents"]),
+                "stream": {
+                    "path": info["path"],
+                    "segments": info["segments"],
+                    "peak_resident_events": stream.peak_resident_events,
+                },
             }
             print(f"#   obs trace: {trace_out} "
                   f"({len(doc['traceEvents'])} events, "
-                  f"{doc['otherData']['fingerprint'][:23]}...)",
+                  f"{doc['otherData']['fingerprint'][:23]}...) + stream "
+                  f"{info['path']} (fingerprint identical)",
                   file=sys.stderr)
+        if monitor is not None:
+            block["incidents"] = monitor.summary()
+            if monitor.paths:
+                by = ", ".join(f"{k}: {v}"
+                               for k, v in sorted(monitor.fired.items()))
+                print(f"#   incidents[{name}]: {len(monitor.paths)} "
+                      f"snapshot(s) ({by})", file=sys.stderr)
 
         if name == "shared-prefix":
             # Serving-regression contract: the same trace with the cache off

@@ -36,6 +36,8 @@ VERSION_CONSTANTS = (
     ("benchmarks/workloads/schema.py", "SCHEMA_VERSION", "BENCH_e2e"),
     ("benchmarks/workloads/trace.py", "TRACE_VERSION", "WORKLOAD_TRACE"),
     ("src/repro/obs/trace.py", "TRACE_SCHEMA_VERSION", "OBS_TRACE"),
+    ("src/repro/obs/trace.py", "STREAM_SCHEMA_VERSION", "OBS_TRACE_STREAM"),
+    ("src/repro/obs/incident.py", "INCIDENT_SCHEMA_VERSION", "OBS_INCIDENT"),
     ("src/repro/plan/plan.py", "PLAN_VERSION", "ModelPlan"),
 )
 

@@ -8,6 +8,21 @@ registry (``repro.obs.metrics`` histograms).  ``--trace-out PATH`` records
 the run as a Perfetto ``trace_event`` timeline (request lifecycle spans +
 step/counter tracks) — inspect with ``python -m repro.obs.timeline PATH``
 or load it in https://ui.perfetto.dev; see docs/observability.md.
+
+Durable-telemetry flags (all composable):
+
+* ``--trace-stream PATH``  — stream events to a rotated JSONL file with
+  bounded memory (``repro.obs.trace.StreamingSink``); analyze with the
+  same timeline CLI.  Combine with ``--trace-out`` to record both ways.
+* ``--incident-dir DIR``   — arm incident snapshots (SLO breach,
+  preemption, rejection, kv pressure, eviction storm); each dump carries
+  the flight-recorder ring + a metrics snapshot.  Without another trace
+  flag this attaches a ring-buffer tracer automatically.
+* ``--metrics-port PORT``  — Prometheus scrape endpoint over the live
+  registry (``/metrics`` text, ``/metrics.json`` snapshot); port 0 binds
+  an ephemeral port and prints it.
+* ``--metrics-textfile PATH`` — atomically rewrite a Prometheus textfile
+  every ``--metrics-interval`` seconds (node-exporter textfile style).
 """
 from __future__ import annotations
 
@@ -20,7 +35,9 @@ import jax
 
 import repro.configs as configs
 from repro.models import model_zoo as zoo
-from repro.obs.trace import EventTracer
+from repro.obs import export as obs_export
+from repro.obs.incident import IncidentMonitor
+from repro.obs.trace import EventTracer, MemorySink, RingSink, StreamingSink, TeeSink
 from repro.plan import ModelPlan, format_plan
 from repro.serving import Request, ServingEngine
 
@@ -40,6 +57,70 @@ def _save_trace(tracer, path: str) -> None:
     print(f"obs trace: {path} ({len(doc['traceEvents'])} events, "
           f"{doc['otherData']['fingerprint'][:23]}…) — analyze with "
           f"python -m repro.obs.timeline {path}", file=sys.stderr)
+
+
+def _obs_setup(args) -> dict:
+    """Build the tracer (sink composition per flags) + incident monitor.
+    Returns the state dict the start/finish helpers thread through."""
+    sinks, stream = [], None
+    if args.trace_out:
+        sinks.append(MemorySink())
+    if args.trace_stream:
+        stream = StreamingSink(args.trace_stream)
+        sinks.append(stream)
+    if not sinks and args.incident_dir:
+        # Flight recorder: incidents need *some* recent-event source, and a
+        # ring is cheap enough to attach implicitly.
+        sinks.append(RingSink())
+    tracer = None
+    if sinks:
+        tracer = EventTracer(sink=sinks[0] if len(sinks) == 1
+                             else TeeSink(*sinks))
+    monitor = IncidentMonitor(args.incident_dir) if args.incident_dir else None
+    return {"tracer": tracer, "stream": stream, "monitor": monitor,
+            "server": None, "textfile": None}
+
+
+def _obs_start(args, engine, obs: dict) -> None:
+    """Bring up the export surface once the engine (and its registry)
+    exists."""
+    if args.metrics_port is not None:
+        obs["server"] = obs_export.start_server(engine.metrics,
+                                                port=args.metrics_port)
+        print(f"metrics: scrape endpoint at {obs['server'].url} "
+              f"(and /metrics.json)", file=sys.stderr)
+    if args.metrics_textfile:
+        obs["textfile"] = obs_export.TextfileWriter(
+            engine.metrics, args.metrics_textfile,
+            interval_s=args.metrics_interval).start()
+
+
+def _obs_finish(args, obs: dict) -> None:
+    """Flush/close every durable-telemetry surface at end of run."""
+    if obs["textfile"] is not None:
+        obs["textfile"].stop()
+        print(f"metrics: textfile {args.metrics_textfile} "
+              f"({obs['textfile'].n_writes} writes)", file=sys.stderr)
+    if obs["server"] is not None:
+        obs["server"].stop()
+    if obs["tracer"] is not None and args.trace_out:
+        _save_trace(obs["tracer"], args.trace_out)
+    if obs["stream"] is not None:
+        info = obs["stream"].finalize()
+        print(f"obs stream: {info['path']} ({info['n_events']} events, "
+              f"{info['segments']} segment(s), "
+              f"{info['fingerprint'][:23]}…) — analyze with "
+              f"python -m repro.obs.timeline {info['path']}", file=sys.stderr)
+    mon = obs["monitor"]
+    if mon is not None:
+        s = mon.summary()
+        if s["n"]:
+            by = ", ".join(f"{k}: {v}" for k, v in sorted(s["by_trigger"].items()))
+            print(f"incidents: {s['n']} snapshot(s) in {args.incident_dir} "
+                  f"({by}; {s['suppressed']} debounced)", file=sys.stderr)
+        else:
+            print(f"incidents: none fired ({s['suppressed']} debounced)",
+                  file=sys.stderr)
 
 
 def main():
@@ -84,6 +165,23 @@ def main():
                     help="wrap each jitted engine step in a jax.profiler "
                          "StepTraceAnnotation so XLA device traces align "
                          "with engine steps")
+    ap.add_argument("--trace-stream", default=None, metavar="PATH",
+                    help="stream trace events to a rotated JSONL file "
+                         "(bounded memory; OBS_TRACE_STREAM schema v1) — "
+                         "same timeline CLI analyzes it")
+    ap.add_argument("--incident-dir", default=None, metavar="DIR",
+                    help="write incident snapshots (ring buffer + metrics "
+                         "snapshot) here when SLO/preemption/rejection/"
+                         "kv-pressure/eviction-storm triggers fire")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus text exposition at "
+                         "http://127.0.0.1:PORT/metrics (0 = ephemeral)")
+    ap.add_argument("--metrics-textfile", default=None, metavar="PATH",
+                    help="periodically rewrite a Prometheus textfile "
+                         "(atomic replace) for scrape-less environments")
+    ap.add_argument("--metrics-interval", type=float, default=5.0,
+                    metavar="SECONDS",
+                    help="rewrite interval for --metrics-textfile")
     args = ap.parse_args()
 
     if args.workload or args.trace_file:
@@ -98,12 +196,13 @@ def main():
         plan = ModelPlan.load(args.plan_file)
         print(f"plan: loaded {args.plan_file} ({len(plan.layers)} layers, "
               f"buckets {list(plan.buckets)})")
-    tracer = EventTracer() if args.trace_out else None
+    obs = _obs_setup(args)
     engine = ServingEngine(cfg, params, max_len=args.max_len,
                            batch_slots=args.slots, packed=not args.no_packed,
                            plan=plan, prefix_cache=args.prefix_cache,
-                           tracer=tracer,
+                           tracer=obs["tracer"], incidents=obs["monitor"],
                            profiler_annotations=args.profile_steps)
+    _obs_start(args, engine, obs)
     if engine.plan is not None:
         if plan is None and args.plan_file:
             engine.plan.save(args.plan_file)
@@ -134,8 +233,7 @@ def main():
         print(f"prefix cache: hit rate {engine.stats['prefix_hit_rate']:.2f} | "
               f"{engine.stats['cached_blocks']} cached blocks | "
               f"{engine.stats['prefix_evictions']} evictions")
-    if tracer is not None:
-        _save_trace(tracer, args.trace_out)
+    _obs_finish(args, obs)
 
 
 def serve_workload(args):
@@ -177,9 +275,12 @@ def serve_workload(args):
     if args.smoke:
         cfg = cfg.reduced()
     params = zoo.init_params(cfg, jax.random.PRNGKey(0))
-    tracer = EventTracer() if args.trace_out else None
+    obs = _obs_setup(args)
     engine = runner.build_engine(spec, cfg, params,
-                                 packed=not args.no_packed, tracer=tracer)
+                                 packed=not args.no_packed,
+                                 tracer=obs["tracer"],
+                                 incidents=obs["monitor"])
+    _obs_start(args, engine, obs)
     reqs, wall = runner.replay(engine, trace)
     m = metrics.latency_metrics(reqs, trace, wall)
     c = metrics.engine_counters(engine)
@@ -194,8 +295,7 @@ def serve_workload(args):
           f"prefill_tokens={c['prefill_tokens']} "
           f"prefix_hit_rate={c.get('prefix_hit_rate', 0.0):.3f} "
           f"plan_kernel={c['plan_kernel']}")
-    if tracer is not None:
-        _save_trace(tracer, args.trace_out)
+    _obs_finish(args, obs)
 
 
 if __name__ == "__main__":

@@ -1,25 +1,41 @@
-"""Engine observability: typed metrics registry, structured event tracing,
-and Perfetto-exportable timelines.
+"""Engine observability: typed metrics registry, structured event tracing
+with pluggable sinks, incident snapshots, a metrics export surface, and
+Perfetto-exportable timelines.
 
-Three modules, layered bottom-up:
+Five modules, layered bottom-up:
 
 * ``metrics``  — :class:`MetricsRegistry`: Counter/Gauge/Histogram with
   labels, the single owner of engine telemetry.  ``ServingEngine.stats``
   is a backward-compatible :class:`StatsView` over it.
 * ``trace``    — :class:`EventTracer`: low-overhead per-request lifecycle
   spans + per-step records, exported as Chrome/Perfetto ``trace_event``
-  JSON (schema-versioned, structure-fingerprinted).  ``NULL_TRACER`` is
-  the no-op recorder the engine runs with by default.
-* ``timeline`` — analysis CLI over a saved trace
-  (``python -m repro.obs.timeline trace.json``): step-budget utilization,
-  batch occupancy, preemption/eviction causality, per-phase breakdown.
+  JSON (schema-versioned, structure-fingerprinted).  Events flow into a
+  pluggable sink: :class:`MemorySink` (export whole), :class:`StreamingSink`
+  (bounded-memory JSONL to disk with rotation), :class:`RingSink`
+  (always-on flight recorder), :class:`TeeSink` (fan-out).  ``NULL_TRACER``
+  is the no-op recorder the engine runs with by default.
+* ``incident`` — :class:`IncidentMonitor`: trigger-driven snapshots (SLO
+  breach, preemption, rejection, kv pressure, eviction storm) dumping the
+  flight-recorder ring + a metrics snapshot into schema-versioned files.
+* ``export``   — Prometheus text exposition over the registry, behind a
+  stdlib scrape endpoint (:class:`MetricsServer`) or a periodic
+  :class:`TextfileWriter`.
+* ``timeline`` — analysis CLI over a saved trace — whole document or JSONL
+  stream (``python -m repro.obs.timeline trace.json|trace.jsonl``):
+  step-budget utilization, batch occupancy, preemption/eviction causality,
+  per-phase breakdown.
 
 See docs/observability.md for the event taxonomy and workflow.
 """
+from repro.obs.export import MetricsServer, TextfileWriter, start_server
+from repro.obs.incident import IncidentMonitor
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry, StatsView
-from repro.obs.trace import NULL_TRACER, EventTracer, NullTracer
+from repro.obs.trace import (NULL_TRACER, EventTracer, MemorySink, NullTracer,
+                             RingSink, StreamingSink, TeeSink)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "StatsView",
     "EventTracer", "NullTracer", "NULL_TRACER",
+    "MemorySink", "StreamingSink", "RingSink", "TeeSink",
+    "IncidentMonitor", "MetricsServer", "TextfileWriter", "start_server",
 ]

@@ -1,8 +1,9 @@
 """Typed metrics registry — the single owner of engine telemetry.
 
-Three metric kinds, Prometheus-shaped but in-process and host-side only
-(this is a single-engine serving stack; there is no scrape endpoint to
-feed):
+Three metric kinds, Prometheus-shaped and host-side; ``repro.obs.export``
+renders the registry in Prometheus text-exposition format behind a
+scrape endpoint (``launch/serve.py --metrics-port``) or a periodic
+textfile writer:
 
 * :class:`Counter`   — monotonically increasing value (``inc``); ``set`` is
   the reset/write-through escape hatch the legacy ``engine.stats`` dict
@@ -37,6 +38,22 @@ from collections.abc import MutableMapping
 import numpy as np
 
 PERCENTILES = (50, 90, 99)
+
+# Default latency bucket bounds (seconds) for the Prometheus histogram
+# rendering in repro.obs.export — exact observations are kept, so buckets
+# are derived at render time, not at observe time.
+DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                   0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
+
+
+def empty_summary() -> dict:
+    """The explicit sentinel for a histogram with no observations: the
+    usual summary shape with numeric zeros (NaN-free, so snapshots stay
+    strict-JSON- and Prometheus-safe) plus ``"empty": True`` — callers
+    that care distinguish on the flag or on ``n == 0``, format sites that
+    multiply ``p50 * 1e3`` keep working."""
+    return {**{f"p{p}": 0.0 for p in PERCENTILES},
+            "mean": 0.0, "max": 0.0, "n": 0, "empty": True}
 
 
 class Counter:
@@ -120,18 +137,34 @@ class Histogram:
     def count(self) -> int:
         return len(self._obs)
 
+    @property
+    def sum(self) -> float:
+        return float(np.sum(self._obs)) if self._obs else 0.0
+
     def percentile(self, p: float) -> float:
         if not self._obs:
             return float("nan")
         return float(np.percentile(np.asarray(self._obs), p))
 
+    def cumulative_buckets(self, bounds: tuple = DEFAULT_BUCKETS) -> list:
+        """Prometheus-style cumulative buckets over ``bounds`` plus the
+        implicit +Inf bucket: ``[(le, n_obs <= le), ...]``."""
+        xs = np.sort(np.asarray(self._obs, dtype=float))
+        out = [(float(b), int(np.searchsorted(xs, b, side="right")))
+               for b in bounds]
+        out.append((float("inf"), int(xs.size)))
+        return out
+
     def summary(self) -> dict:
         """{p50, p90, p99, mean, max, n} — the same shape as
-        ``benchmarks.workloads.metrics.percentile_summary``."""
-        if not self._obs:
-            return {**{f"p{p}": float("nan") for p in PERCENTILES},
-                    "mean": float("nan"), "max": float("nan"), "n": 0}
-        xs = np.asarray(self._obs)
+        ``benchmarks.workloads.metrics.percentile_summary``.  Empty
+        histograms return :func:`empty_summary` (NaN-free, ``empty``
+        flag) instead of NaN fields, so ``latency_percentiles()`` on a
+        fresh engine is safe to JSON-encode and render."""
+        obs = list(self._obs)    # snapshot: scrape threads read concurrently
+        if not obs:
+            return empty_summary()
+        xs = np.asarray(obs)
         out = {f"p{p}": float(np.percentile(xs, p)) for p in PERCENTILES}
         out["mean"] = float(xs.mean())
         out["max"] = float(xs.max())
@@ -160,6 +193,12 @@ class _Family:
     @property
     def kind(self):
         return self._cls.kind
+
+    def items(self):
+        """``(labels_dict, child)`` pairs in creation order — the export
+        renderer's iteration surface."""
+        return [(dict(zip(self.labels_keys, key)), child)
+                for key, child in self._children.items()]
 
     def labels(self, **kv):
         if set(kv) != set(self.labels_keys):
@@ -219,6 +258,12 @@ class MetricsRegistry:
 
     def names(self) -> list:
         return list(self._metrics)
+
+    def metrics(self) -> dict:
+        """``name -> metric-or-family`` in declaration order; families
+        expose ``items()``.  This is the surface ``repro.obs.export``
+        renders from."""
+        return dict(self._metrics)
 
     def _flat(self):
         for m in self._metrics.values():

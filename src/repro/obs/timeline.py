@@ -1,13 +1,20 @@
 """Timeline analysis over a saved observability trace.
 
 ``python -m repro.obs.timeline trace.json`` loads + validates a Perfetto
-document written by :class:`repro.obs.trace.EventTracer` and summarizes
+document written by :class:`repro.obs.trace.EventTracer`;
+``python -m repro.obs.timeline trace.jsonl`` stream-parses a rotated
+``OBS_TRACE_STREAM`` JSONL file (``StreamingSink`` output) one event at a
+time — the analysis is single-pass with O(requests + preemptions) state,
+so it never materializes a long run's event list.  Both paths summarize
 what the raw event stream actually says about the run:
 
 * **step-budget utilization** — Σ realized / Σ planned tokens across step
   records.  ``planned`` is the padded B×C step width (the rows the jitted
   kernel really multiplies), so ``1 - utilization`` is exactly the padding
-  waste the ROADMAP's flat token-packing item targets.
+  waste the ROADMAP's flat token-packing item targets.  A zero-step trace
+  reports ``None`` (JSON null) rather than NaN — and fails a
+  ``--min-step-utilization`` gate with a clear message instead of a
+  silent pass (``nan < x`` is always False) or a traceback.
 * **batch occupancy** — mean active slots per step, against the slot count.
 * **per-phase time** — wall time split into prefill-carrying vs pure-decode
   steps (from complete-event durations) plus per-request queued/prefill/
@@ -31,128 +38,187 @@ import sys
 
 from repro.obs import trace as _trace
 
+_PRESSURE_NAMES = ("kv_pressure", "prefix_evict")
 
-def _span_durations(events: list) -> dict:
-    """Total duration per async span name, matching b/e pairs per (id,
-    name).  Unclosed spans are ignored (a truncated run is still
-    analyzable)."""
-    open_ts: dict = {}
-    totals: dict = {}
-    counts: dict = {}
-    for e in events:
+
+class _Accumulator:
+    """Single-pass analysis state over a trace-event stream.  Relies only
+    on stream order (events are appended as they happen; ``ts`` is
+    monotone in emission order), so it works identically over an in-memory
+    document and a disk-backed JSONL stream."""
+
+    def __init__(self):
+        # steps
+        self.n_steps = 0
+        self.n_prefill_steps = 0
+        self.n_decode_steps = 0
+        self.planned = 0
+        self.realized = 0
+        self.occ_sum = 0
+        self.occ_n = 0
+        self.wall_prefill = 0.0
+        self.wall_decode = 0.0
+        self.kernels: dict = {}
+        # spans
+        self._open_ts: dict = {}
+        self._span_totals: dict = {}
+        self._span_counts: dict = {}
+        # requests + preemption causality
+        self.req_ids: set = set()
+        self._admitted: dict = {}    # uid -> [(ts, readmission), ...]
+        self._finished: dict = {}    # uid -> [ts, ...]
+        self._last_pressure = None   # most recent pressure instant
+        self._preempts: list = []    # (uid, ts, cause-snapshot) in order
+        # prefix reuse + instants
+        self.hits = 0
+        self.hit_tokens = 0
+        self.inserts = 0
+        self.evict_by_cause: dict = {}
+        self.kv_pressure_events = 0
+
+    def feed(self, e: dict):
         ph = e.get("ph")
-        if ph not in ("b", "e"):
-            continue
-        key = (e.get("id"), e["name"])
-        if ph == "b":
-            open_ts[key] = e["ts"]
-        elif key in open_ts:
-            totals[e["name"]] = totals.get(e["name"], 0.0) \
-                + (e["ts"] - open_ts.pop(key))
-            counts[e["name"]] = counts.get(e["name"], 0) + 1
-    return {name: {"total_us": totals[name], "n": counts[name]}
-            for name in totals}
+        name = e.get("name")
+        if ph == "X" and name == "step":
+            args = e["args"]
+            self.n_steps += 1
+            self.planned += args.get("planned", 0)
+            self.realized += args.get("realized", 0)
+            if "active_slots" in args:
+                self.occ_sum += args["active_slots"]
+                self.occ_n += 1
+            if args.get("prefill_tokens", 0) > 0:
+                self.n_prefill_steps += 1
+                self.wall_prefill += e["dur"]
+            else:
+                self.n_decode_steps += 1
+                self.wall_decode += e["dur"]
+            k = args.get("kernel")
+            if k is not None:
+                self.kernels[k] = self.kernels.get(k, 0) + 1
+        elif ph in ("b", "e"):
+            if name == "req":
+                self.req_ids.add(e["id"])
+            key = (e.get("id"), name)
+            if ph == "b":
+                self._open_ts[key] = e["ts"]
+            elif key in self._open_ts:
+                self._span_totals[name] = self._span_totals.get(name, 0.0) \
+                    + (e["ts"] - self._open_ts.pop(key))
+                self._span_counts[name] = self._span_counts.get(name, 0) + 1
+        elif ph == "n":
+            if name == "req":
+                self.req_ids.add(e["id"])
+            if name == "admitted":
+                self._admitted.setdefault(e["id"], []).append(
+                    (e["ts"], bool(e["args"].get("readmission"))))
+            elif name == "finished":
+                self._finished.setdefault(e["id"], []).append(e["ts"])
+            elif name == "preempted":
+                p = self._last_pressure
+                cause = None
+                if p is not None and p["ts"] <= e["ts"]:
+                    cause = {"event": p["name"], **p["args"]}
+                self._preempts.append((e["id"], e["ts"], cause))
+            elif name == "prefix_hit":
+                self.hits += 1
+                self.hit_tokens += e["args"].get("cached_len", 0)
+        elif ph == "i":
+            if name in _PRESSURE_NAMES:
+                self._last_pressure = e
+            if name == "kv_pressure":
+                self.kv_pressure_events += 1
+            elif name == "prefix_evict":
+                c = e["args"].get("cause", "unknown")
+                self.evict_by_cause[c] = self.evict_by_cause.get(c, 0) + 1
+            elif name == "prefix_insert":
+                self.inserts += 1
+
+    def summary(self) -> dict:
+        chains = []
+        for uid, ts, cause in self._preempts:
+            readmit = any(a_ts > ts and re_adm
+                          for a_ts, re_adm in self._admitted.get(uid, ()))
+            finished = any(f > ts for f in self._finished.get(uid, ()))
+            chains.append({"uid": uid, "cause": cause,
+                           "readmitted": readmit, "finished": finished})
+        spans = {name: {"total_us": self._span_totals[name],
+                        "n": self._span_counts[name]}
+                 for name in self._span_totals}
+        return {
+            "n_requests": len(self.req_ids),
+            "steps": {
+                "n": self.n_steps,
+                "prefill": self.n_prefill_steps,
+                "decode": self.n_decode_steps,
+                "planned_tokens": self.planned,
+                "realized_tokens": self.realized,
+                # None (JSON null), not NaN: a zero-step trace must be
+                # distinguishable in strict JSON and must not silently
+                # pass a numeric gate.
+                "budget_utilization": (self.realized / self.planned)
+                                      if self.planned else None,
+                "mean_active_slots": (self.occ_sum / self.occ_n)
+                                     if self.occ_n else None,
+                "wall_us": {
+                    "prefill": self.wall_prefill,
+                    "decode": self.wall_decode,
+                },
+                "kernel_steps": self.kernels,
+            },
+            "spans_us": spans,
+            "preemptions": {
+                "n": len(chains),
+                "readmitted": sum(c["readmitted"] for c in chains),
+                "chains": chains,
+            },
+            "prefix": {
+                "hits": self.hits,
+                "hit_tokens": self.hit_tokens,
+                "inserts": self.inserts,
+                "evictions_by_cause": self.evict_by_cause,
+            },
+            "kv_pressure_events": self.kv_pressure_events,
+        }
+
+
+def analyze_events(events) -> dict:
+    """Pure single-pass analysis over an event iterable (document list or
+    stream reader) — everything but the provenance fields."""
+    acc = _Accumulator()
+    for e in events:
+        acc.feed(e)
+    return acc.summary()
 
 
 def analyze(doc: dict) -> dict:
-    """Pure analysis: Perfetto document -> summary dict (JSON-safe)."""
+    """Perfetto document -> summary dict (JSON-safe)."""
     evs = doc["traceEvents"]
-    steps = [e for e in evs if e.get("ph") == "X" and e["name"] == "step"]
-    marks = [e for e in evs if e.get("ph") == "n"]
-    instants = [e for e in evs if e.get("ph") == "i"]
-
-    # -- step budget + occupancy + phase split ------------------------------
-    planned = sum(s["args"].get("planned", 0) for s in steps)
-    realized = sum(s["args"].get("realized", 0) for s in steps)
-    occ = [s["args"]["active_slots"] for s in steps
-           if "active_slots" in s["args"]]
-    prefill_steps = [s for s in steps if s["args"].get("prefill_tokens", 0) > 0]
-    decode_steps = [s for s in steps if s["args"].get("prefill_tokens", 0) == 0]
-    kernels: dict = {}
-    for s in steps:
-        k = s["args"].get("kernel")
-        if k is not None:
-            kernels[k] = kernels.get(k, 0) + 1
-
-    # -- preemption causality ----------------------------------------------
-    admitted: dict = {}       # uid -> list of admitted marks (ts order)
-    for m in marks:
-        if m["name"] == "admitted":
-            admitted.setdefault(m["id"], []).append(m)
-    pressure = [e for e in instants
-                if e["name"] in ("kv_pressure", "prefix_evict")]
-    chains = []
-    for m in marks:
-        if m["name"] != "preempted":
-            continue
-        uid, ts = m["id"], m["ts"]
-        before = [p for p in pressure if p["ts"] <= ts]
-        cause = before[-1] if before else None
-        readmit = next((a for a in admitted.get(uid, ())
-                        if a["ts"] > ts and a["args"].get("readmission")),
-                       None)
-        finished = any(x["name"] == "finished" and x["id"] == uid
-                       and x["ts"] > ts for x in marks)
-        chains.append({
-            "uid": uid,
-            "cause": None if cause is None else
-                     {"event": cause["name"], **cause["args"]},
-            "readmitted": readmit is not None,
-            "finished": finished,
-        })
-
-    # -- prefix reuse -------------------------------------------------------
-    hits = [m for m in marks if m["name"] == "prefix_hit"]
-    evicts = [e for e in instants if e["name"] == "prefix_evict"]
-    evict_by_cause: dict = {}
-    for e in evicts:
-        c = e["args"].get("cause", "unknown")
-        evict_by_cause[c] = evict_by_cause.get(c, 0) + 1
-
-    spans = _span_durations(evs)
-    n_req = len({e["id"] for e in evs
-                 if e.get("ph") in ("b", "e", "n") and e["name"] == "req"})
-
-    return {
-        "schema_version": doc["otherData"]["schema_version"],
-        "fingerprint": doc["otherData"]["fingerprint"],
-        "n_events": len(evs),
-        "n_requests": n_req,
-        "steps": {
-            "n": len(steps),
-            "prefill": len(prefill_steps),
-            "decode": len(decode_steps),
-            "planned_tokens": planned,
-            "realized_tokens": realized,
-            "budget_utilization": (realized / planned) if planned else
-                                  float("nan"),
-            "mean_active_slots": (sum(occ) / len(occ)) if occ else
-                                 float("nan"),
-            "wall_us": {
-                "prefill": sum(s["dur"] for s in prefill_steps),
-                "decode": sum(s["dur"] for s in decode_steps),
-            },
-            "kernel_steps": kernels,
-        },
-        "spans_us": spans,
-        "preemptions": {
-            "n": len(chains),
-            "readmitted": sum(c["readmitted"] for c in chains),
-            "chains": chains,
-        },
-        "prefix": {
-            "hits": len(hits),
-            "hit_tokens": sum(h["args"].get("cached_len", 0) for h in hits),
-            "inserts": sum(e["name"] == "prefix_insert" for e in instants),
-            "evictions_by_cause": evict_by_cause,
-        },
-        "kv_pressure_events": sum(e["name"] == "kv_pressure"
-                                  for e in instants),
-    }
+    out = analyze_events(evs)
+    out["schema_version"] = doc["otherData"]["schema_version"]
+    out["fingerprint"] = doc["otherData"]["fingerprint"]
+    out["n_events"] = len(evs)
+    return out
 
 
-def _pct(x: float) -> str:
-    return "n/a" if x != x else f"{100.0 * x:.1f}%"
+def analyze_stream(reader) -> dict:
+    """JSONL stream (path or :class:`repro.obs.trace.StreamReader`) ->
+    the same summary :func:`analyze` produces for the equivalent document,
+    plus a ``stream`` provenance block — without ever holding the event
+    list in memory."""
+    if isinstance(reader, str):
+        reader = _trace.StreamReader(reader)
+    out = analyze_events(iter(reader))
+    out["schema_version"] = reader.header["schema_version"]
+    out["fingerprint"] = reader.fingerprint
+    out["n_events"] = reader.n_events
+    out["stream"] = {"complete": reader.complete,
+                     "segments": (reader.footer or {}).get("segments")}
+    return out
+
+
+def _pct(x) -> str:
+    return "n/a" if x is None or x != x else f"{100.0 * x:.1f}%"
 
 
 def format_summary(s: dict) -> str:
@@ -167,11 +233,16 @@ def format_summary(s: dict) -> str:
         f"({st['realized_tokens']}/{st['planned_tokens']} tokens; "
         f"rest is padded batch width)",
         f"  mean active slots: {st['mean_active_slots']:.2f}"
-        if st["mean_active_slots"] == st["mean_active_slots"]
+        if st["mean_active_slots"] is not None
         else "  mean active slots: n/a",
         f"  wall time: prefill {st['wall_us']['prefill'] / 1e3:.1f} ms, "
         f"decode {st['wall_us']['decode'] / 1e3:.1f} ms",
     ]
+    if s.get("stream"):
+        state = "complete" if s["stream"]["complete"] else \
+            "INCOMPLETE (no final footer — writer died mid-run?)"
+        lines.insert(1, f"  stream: {state}, "
+                        f"{s['stream'].get('segments') or '?'} segment(s)")
     if st["kernel_steps"]:
         ks = ", ".join(f"{k}: {v}" for k, v in
                        sorted(st["kernel_steps"].items()))
@@ -215,8 +286,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.timeline",
         description="Summarize an engine observability trace "
-                    "(Perfetto trace_event JSON).")
-    ap.add_argument("trace", help="path to a --trace-out JSON document")
+                    "(Perfetto trace_event JSON document, or a "
+                    "StreamingSink JSONL stream).")
+    ap.add_argument("trace", help="path to a --trace-out JSON document or "
+                                  "a --trace-stream JSONL stream")
     ap.add_argument("--json", action="store_true",
                     help="emit the analysis as JSON instead of text")
     ap.add_argument("--require", nargs="+", choices=sorted(_REQUIRE_CHECKS),
@@ -231,8 +304,8 @@ def main(argv=None) -> int:
                          "padding-waste win from regressing")
     args = ap.parse_args(argv)
 
-    doc = _trace.load(args.trace)
-    summary = analyze(doc)
+    kind, obj = _trace.load_any(args.trace)
+    summary = analyze_stream(obj) if kind == "stream" else analyze(obj)
 
     if args.json:
         print(json.dumps(summary, indent=2, sort_keys=True))
@@ -246,7 +319,12 @@ def main(argv=None) -> int:
         return 1
     if args.min_step_utilization is not None:
         util = summary["steps"]["budget_utilization"]
-        if util is None or util < args.min_step_utilization:
+        if util is None:
+            print("trace contains no step records (planned tokens == 0): "
+                  "cannot evaluate --min-step-utilization "
+                  f"{args.min_step_utilization}", file=sys.stderr)
+            return 1
+        if util < args.min_step_utilization:
             print(f"step-budget utilization {util} below required "
                   f"{args.min_step_utilization}", file=sys.stderr)
             return 1

@@ -326,7 +326,8 @@ class ServingEngine:
                  sparse: str | bool = "auto",
                  sparse_block: tuple | None = None,
                  prefix_cache: bool | int = False,
-                 tracer=None, profiler_annotations: bool = False):
+                 tracer=None, profiler_annotations: bool = False,
+                 incidents=None, flight_recorder: bool | int = False):
         self.cfg = cfg
         self.params = (freeze_params(params, sparse=sparse,
                                      block_shape=sparse_block)
@@ -387,6 +388,15 @@ class ServingEngine:
         # tracer defaults to the no-op recorder: every emit site guards on
         # ``tracer.enabled``, so an untraced engine pays one attribute read
         # per potential event and its counters stay bit-identical.
+        if tracer is None and flight_recorder:
+            # Always-on flight recorder: a ring-buffered tracer cheap enough
+            # to leave enabled, so incident snapshots can dump the last N
+            # events post-hoc.  An int picks the ring capacity.
+            cap = (flight_recorder
+                   if isinstance(flight_recorder, int)
+                   and not isinstance(flight_recorder, bool)
+                   else obs_trace.DEFAULT_RING_CAPACITY)
+            tracer = obs_trace.EventTracer(sink=obs_trace.RingSink(cap))
         self.tracer = NULL_TRACER if tracer is None else tracer
         self._profile_steps = bool(profiler_annotations)
         self._phase: dict[int, str] = {}  # uid -> open lifecycle span (traced)
@@ -395,6 +405,15 @@ class ServingEngine:
         if self.prefix is not None:
             self.prefix.tracer = self.tracer
         reg = self.metrics = MetricsRegistry()
+        # Incident snapshots (repro.obs.incident): the monitor hooks sit
+        # OUTSIDE the tracer.enabled guards and own no registry metrics, so
+        # attaching one perturbs neither traced-vs-untraced bit-identity nor
+        # the exact-gated benchmark counters.
+        self.incidents = incidents
+        self._evictions_seen = 0
+        if incidents is not None:
+            incidents.bind(registry=reg, tracer=self.tracer)
+        self.kv.incidents = incidents
         t_step = reg.counter("step_time_s",
                              "wall seconds in jitted step calls, by phase",
                              labels=("phase",))
@@ -584,7 +603,11 @@ class ServingEngine:
             # Mirror scheduler rejections (prompt-too-long, finished-ignored
             # at admission) into the registry so goodput denominators and
             # ``stats["rejections"]`` stay honest.
-            self._c_rejections.inc(self.sched.rejections - rej0)
+            n_rej = self.sched.rejections - rej0
+            self._c_rejections.inc(n_rej)
+            if self.incidents is not None:
+                self.incidents.observe("rejection", n=n_rej,
+                                       queue_len=len(self._queue))
         tr = self.tracer
         for i, st in admitted:
             self._c_admissions.inc()
@@ -675,6 +698,8 @@ class ServingEngine:
         if first:
             req.t_first = time.perf_counter()
             self._h_ttft.observe(req.ttft)
+            if self.incidents is not None:
+                self.incidents.request_first_token(req)
         if tr.enabled:
             # A token emission always means the prompt is fully in cache —
             # close the prefill phase (also after a re-prefill following
@@ -691,6 +716,8 @@ class ServingEngine:
             req.done = True
             req.t_done = time.perf_counter()
             self._h_tpot.observe(req.tpot)
+            if self.incidents is not None:
+                self.incidents.request_finished(req)
             if tr.enabled:
                 tr.end(req.uid, "decode")
                 tr.mark(req.uid, "finished", n_out=len(req.out_tokens),
@@ -808,6 +835,12 @@ class ServingEngine:
                 # tests/test_prefix_cache.py).
                 self._register_prefix(i, st)
         self._sync_prefix_stats()
+        if self.incidents is not None:
+            ev = (int(self.stats["prefix_evictions"])
+                  if self.prefix is not None else 0)
+            self.incidents.step_tick(
+                evictions=max(0, ev - self._evictions_seen))
+            self._evictions_seen = ev
         return True
 
     def _preempt(self, i: int):
@@ -839,6 +872,10 @@ class ServingEngine:
         self._queue.insert(0, st.req)
         self._c_preemptions.inc()
         st.req.n_preempted += 1
+        if self.incidents is not None:
+            self.incidents.observe("preemption", uid=st.req.uid, slot=i,
+                                   cursor=st.cursor,
+                                   n_preempted=st.req.n_preempted)
 
     @property
     def busy(self) -> bool:
@@ -910,7 +947,14 @@ class ServingEngine:
         self._g_step_tokens.set(0)
         self.metrics.reset_run()
         self._sync_prefix_stats()
+        # A streaming sink truncates its on-disk segments here too, so
+        # warm-up events never leak into saved long-run traces.
         self.tracer.reset()
+        self._evictions_seen = 0
+        if self.incidents is not None:
+            # Warm-up incidents (e.g. a compile-inflated TTFT breach) are
+            # noise: discard their files and re-arm the debouncing.
+            self.incidents.reset_run()
 
     # -- metrics --------------------------------------------------------------
 

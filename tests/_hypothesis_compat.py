@@ -9,7 +9,7 @@ session at import time.
 
 Supported subset: ``@settings(max_examples=..., deadline=...)``, ``@given``
 with keyword strategies, and ``st.integers`` / ``st.sampled_from`` /
-``st.booleans`` / ``st.floats``.
+``st.booleans`` / ``st.floats`` / ``st.tuples`` / ``st.lists``.
 """
 try:
     from hypothesis import given, settings, strategies  # noqa: F401
@@ -48,6 +48,17 @@ except ImportError:
         @staticmethod
         def floats(min_value=0.0, max_value=1.0, **_ignored):
             return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_ignored):
+            return _Strategy(
+                lambda rng: [elements.example(rng)
+                             for _ in range(rng.randint(min_size, max_size))])
 
     def given(**strats):
         def deco(fn):

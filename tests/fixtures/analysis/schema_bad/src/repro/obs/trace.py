@@ -2,6 +2,7 @@
 against a bare int literal (the docs mismatch lives in docs/format.md)."""
 
 TRACE_SCHEMA_VERSION = 1
+STREAM_SCHEMA_VERSION = 1
 
 
 def validate(doc):

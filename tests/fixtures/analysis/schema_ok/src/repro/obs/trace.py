@@ -2,6 +2,7 @@
 constant, docs cite the current version — no findings."""
 
 TRACE_SCHEMA_VERSION = 1
+STREAM_SCHEMA_VERSION = 1
 
 
 def validate(doc):

@@ -55,7 +55,12 @@ class TestMetrics:
 
     def test_histogram_summary(self):
         h = Histogram("lat")
-        assert h.summary()["n"] == 0 and math.isnan(h.summary()["p50"])
+        empty = h.summary()
+        # empty histograms return an explicit NaN-free sentinel, not NaN
+        assert empty["n"] == 0 and empty["empty"] is True
+        assert empty["p50"] == 0.0 and empty["mean"] == 0.0
+        assert not any(isinstance(v, float) and math.isnan(v)
+                       for v in empty.values())
         for v in range(1, 101):
             h.observe(v / 100.0)
         h.observe(None)   # ignored, like an unfinished request's ttft
